@@ -1,0 +1,144 @@
+//! End-to-end validation driver (DESIGN.md §6): exercises the FULL
+//! stack on a real small workload and reports the paper's headline
+//! metrics.  All three layers compose here:
+//!
+//!   L1/L2 (build time): `make artifacts` lowered the JAX + Pallas
+//!   surface pipeline to HLO text;
+//!   L3 (run time): this binary loads the artifacts over PJRT, runs the
+//!   offline phase through them, then serves a batch of transfer
+//!   requests with every optimizer on three network profiles.
+//!
+//! Recorded in EXPERIMENTS.md.  Run with:
+//!   `cargo run --release --example e2e_paper_run`
+
+use std::sync::Arc;
+use twophase::baselines::ann_ot::AnnOtModel;
+use twophase::baselines::api::OptimizerKind;
+use twophase::baselines::static_ann::StaticAnnModel;
+use twophase::coordinator::orchestrator::{
+    Orchestrator, OrchestratorConfig, TransferRequest,
+};
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::offline::kmeans::NativeKmeans;
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::offline::surface::NativeSurfaceBackend;
+use twophase::runtime::accel::PjrtSurfaceBackend;
+use twophase::runtime::engine::Engine;
+use twophase::sim::dataset::Dataset;
+use twophase::sim::profile::NetProfile;
+use twophase::util::stats;
+use twophase::util::table::Table;
+use twophase::util::timer::time_once;
+
+fn main() {
+    println!("== end-to-end paper run ==\n");
+
+    // ------------------------------------------------------ history --
+    let mut logs = Vec::new();
+    for p in NetProfile::all() {
+        logs.extend(generate_history(
+            &p,
+            &GeneratorConfig {
+                days: 14.0,
+                transfers_per_hour: 8.0,
+                seed: 0xB16_DA7A,
+            },
+        ));
+    }
+    println!("history: {} GridFTP-style entries across 4 networks", logs.len());
+
+    // ------------------------------------------- offline (PJRT path) --
+    let kb = match Engine::try_default() {
+        Some(engine) => {
+            println!("offline phase through the AOT JAX/Pallas artifacts (PJRT)...");
+            let backend = PjrtSurfaceBackend::new(engine);
+            let (kb, t) = time_once(|| {
+                KnowledgeBase::build(
+                    logs.clone(),
+                    OfflineConfig::default(),
+                    &backend,
+                    &NativeKmeans,
+                )
+            });
+            println!("  done in {t:?}: {} surfaces", kb.n_surfaces());
+            kb
+        }
+        None => {
+            println!("artifacts missing -> native offline phase (run `make artifacts`)");
+            KnowledgeBase::build(
+                logs.clone(),
+                OfflineConfig::default(),
+                &NativeSurfaceBackend,
+                &NativeKmeans,
+            )
+        }
+    };
+
+    // ------------------------------------------------------- serving --
+    let orch = Orchestrator::new(
+        Arc::new(kb),
+        Arc::new(StaticAnnModel::train(&logs, 32, 0xE1)),
+        Arc::new(AnnOtModel::train(&logs, 32, 0xE2)),
+        OrchestratorConfig::default(),
+    );
+
+    let workloads = [
+        ("xsede", Dataset::new(20_000, 1.0)),   // 20 GB of small files
+        ("xsede", Dataset::new(64, 512.0)),     // 32 GB of large files
+        ("didclab-xsede", Dataset::new(256, 64.0)), // 16 GB medium
+    ];
+    let models = [
+        OptimizerKind::Asm,
+        OptimizerKind::Harp,
+        OptimizerKind::Globus,
+        OptimizerKind::NoOpt,
+    ];
+
+    let mut table = Table::new(&["workload", "ASM", "HARP", "GO", "NoOpt", "ASM/HARP", "ASM/NoOpt"]);
+    let mut asm_vs_harp = Vec::new();
+    let mut asm_vs_noopt = Vec::new();
+    let mut id = 0;
+    for (net, dataset) in &workloads {
+        let mut cells = Vec::new();
+        for model in models {
+            let mut ths = Vec::new();
+            for rep in 0..3u64 {
+                id += 1;
+                let req = TransferRequest {
+                    id,
+                    profile: NetProfile::by_name(net).unwrap(),
+                    dataset: dataset.clone(),
+                    model,
+                    seed: 0xE2E ^ (id + rep),
+                    phase_s: 3.0 * 3600.0,
+                };
+                ths.push(orch.execute(&req).avg_throughput_mbps);
+            }
+            cells.push(stats::mean(&ths));
+        }
+        let r_harp = cells[0] / cells[1].max(1e-9);
+        let r_noopt = cells[0] / cells[3].max(1e-9);
+        asm_vs_harp.push(r_harp);
+        asm_vs_noopt.push(r_noopt);
+        table.row(&[
+            format!("{net} {:.0}MBx{}", dataset.avg_file_mb, dataset.n_files),
+            format!("{:.0}", cells[0]),
+            format!("{:.0}", cells[1]),
+            format!("{:.0}", cells[2]),
+            format!("{:.0}", cells[3]),
+            format!("{r_harp:.2}x"),
+            format!("{r_noopt:.2}x"),
+        ]);
+    }
+    println!("\nend-to-end achieved throughput (Mbps, mean of 3 seeds):");
+    table.print();
+    println!(
+        "headline: ASM vs HARP geo-mean {:.2}x (paper 1.2-1.7x), vs NoOpt {:.1}x (paper ~5x)",
+        geo_mean(&asm_vs_harp),
+        geo_mean(&asm_vs_noopt)
+    );
+}
+
+fn geo_mean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}

@@ -1,0 +1,43 @@
+//! Multi-user fairness scenario (§5.4): four users share the Chameleon
+//! bottleneck, all running the same optimizer; compares ASM, HARP, GO
+//! and the default across aggregate throughput and per-user fairness.
+//!
+//! Run with: `cargo run --release --example multiuser_fairness`
+
+use twophase::baselines::api::OptimizerKind;
+use twophase::experiments::fig9;
+use twophase::util::stats;
+
+fn main() {
+    println!("== multi-user fairness (Chameleon, 4 users) ==\n");
+    let res = fig9::run();
+
+    println!("\nper-user time-mean shares and Jain indices:");
+    for row in &res.rows {
+        println!(
+            "  {:<6} jain={:.3}  per-user σ={:>7.1} Mbps",
+            row.model.label(),
+            row.jain,
+            row.stddev_mbps
+        );
+    }
+
+    let asm = res.aggregate(OptimizerKind::Asm);
+    let noopt = res.aggregate(OptimizerKind::NoOpt);
+    println!(
+        "\nheadline: ASM aggregate = {:.0} Mbps = {:.1}x the no-optimization default",
+        asm,
+        asm / noopt.max(1e-9)
+    );
+    let asm_users: Vec<f64> = res
+        .rows
+        .iter()
+        .find(|r| r.model == OptimizerKind::Asm)
+        .map(|r| r.per_user_mbps.clone())
+        .unwrap_or_default();
+    println!(
+        "ASM fairness: Jain index {:.3} across users {:?}",
+        stats::jain_index(&asm_users),
+        asm_users.iter().map(|v| v.round()).collect::<Vec<_>>()
+    );
+}

@@ -1,0 +1,103 @@
+//! Offline-phase walkthrough: what the knowledge discovery actually
+//! produces — clusters, load buckets, throughput surfaces, maxima and
+//! sampling regions — and the PJRT-accelerated path when artifacts are
+//! built.
+//!
+//! Run with: `cargo run --release --example offline_analysis`
+
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::offline::kmeans::NativeKmeans;
+use twophase::offline::maxima::find_local_maxima;
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::offline::surface::NativeSurfaceBackend;
+use twophase::runtime::accel::PjrtSurfaceBackend;
+use twophase::runtime::engine::Engine;
+use twophase::sim::profile::NetProfile;
+use twophase::util::timer::time_once;
+
+fn main() {
+    println!("== offline knowledge discovery ==\n");
+    let mut logs = Vec::new();
+    for p in [NetProfile::xsede(), NetProfile::didclab_xsede()] {
+        logs.extend(generate_history(
+            &p,
+            &GeneratorConfig {
+                days: 10.0,
+                transfers_per_hour: 8.0,
+                seed: 0xB16_DA7A,
+            },
+        ));
+    }
+    println!("log corpus: {} entries over 10 days, 2 networks", logs.len());
+
+    // native build
+    let (kb, native_t) = time_once(|| {
+        KnowledgeBase::build(
+            logs.clone(),
+            OfflineConfig::default(),
+            &NativeSurfaceBackend,
+            &NativeKmeans,
+        )
+    });
+    println!(
+        "native offline phase: {:?} -> k={} ({:?}, CH={:.0}), {} surface sets",
+        native_t,
+        kb.clustering.k,
+        kb.clustering.algo,
+        kb.clustering.ch_score,
+        kb.sets.len()
+    );
+
+    // PJRT-accelerated build (same result, AOT JAX/Pallas artifacts)
+    if let Some(engine) = Engine::try_default() {
+        let backend = PjrtSurfaceBackend::new(engine);
+        let (kb2, pjrt_t) = time_once(|| {
+            KnowledgeBase::build(
+                logs.clone(),
+                OfflineConfig::default(),
+                &backend,
+                &NativeKmeans,
+            )
+        });
+        println!(
+            "PJRT offline phase:   {:?} -> {} surfaces (parity with native: {})",
+            pjrt_t,
+            kb2.n_surfaces(),
+            kb2.n_surfaces() == kb.n_surfaces()
+        );
+    } else {
+        println!("(artifacts not built; run `make artifacts` for the PJRT path)");
+    }
+
+    // inspect one surface set
+    let p = NetProfile::xsede();
+    let set = kb.query(p.rtt_s, p.bandwidth_mbps, 512.0, 64).unwrap();
+    println!(
+        "\nquery(xsede, 512 MB files) -> cluster {} / class {:?}:",
+        set.cluster, set.class
+    );
+    for b in &set.buckets {
+        println!(
+            "  bucket {} (load {:.2}): optimum {} -> {:.0} Mbps over {} pp-slices",
+            b.bucket,
+            b.load_intensity,
+            b.optimal_params,
+            b.optimal_th,
+            b.slices.len()
+        );
+        if let Some(s) = b.slices.first() {
+            let maxima = find_local_maxima(&s.fitted.surface, 8);
+            println!(
+                "    pp={} slice: {} local maxima (Hessian-tested), sigma={:.1}",
+                s.pp,
+                maxima.len(),
+                s.confidence.sigma
+            );
+        }
+    }
+    println!(
+        "  sampling region R_s: {} points ({} from maxima)",
+        set.sampling.len(),
+        set.sampling.iter().filter(|q| q.from_maxima).count()
+    );
+}

@@ -1,0 +1,115 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry point plus ``manifest.json``
+describing shapes, so the Rust runtime can validate its buffers before
+executing.  HLO text — NOT ``lowered.compile()`` / ``.serialize()`` —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE, at build time.  The Rust binary never imports it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Fixed AOT shape family (the Rust side pads to these; see runtime/manifest.rs)
+# ---------------------------------------------------------------------------
+S = 16     # surfaces per batch (cluster x load-bucket slices)
+GP = 8     # knots along p  (parallelism axis)
+GC = 8     # knots along cc (concurrency axis)
+RF = 8     # per-patch refinement factor
+N = 2048   # log feature vectors per kmeans batch
+D = 8      # padded feature dimension
+K = 16     # max clusters
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def entry_points():
+    """(name, fn, example_args) for every artifact."""
+    return [
+        (
+            "surface_fit",
+            model.fit_bicubic,
+            (_spec(GP), _spec(GC), _spec(S, GP, GC)),
+        ),
+        (
+            "surface_pipeline",
+            lambda xs, ys, v: model.surface_pipeline(xs, ys, v, rf=RF),
+            (_spec(GP), _spec(GC), _spec(S, GP, GC)),
+        ),
+        (
+            "kmeans_step",
+            model.kmeans_step,
+            (_spec(N, D), _spec(K, D)),
+        ),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_list(avals) -> list:
+    return [list(a.shape) for a in avals]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "consts": {"S": S, "GP": GP, "GC": GC, "RF": RF, "N": N, "D": D, "K": K},
+        "artifacts": {},
+    }
+    for name, fn, specs in entry_points():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # output shapes from an abstract eval of the jitted fn
+        out_avals = jax.eval_shape(fn, *specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": shape_list(specs),
+            "outputs": shape_list(out_avals),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: pairwise squared Euclidean distances for K-means++.
+
+The offline clustering phase assigns every historical-log feature vector
+to its nearest centroid each Lloyd iteration; with six weeks of logs the
+[N, K] distance matrix is the dominant cost.  The kernel uses the
+classic expansion
+
+    ||x - c||^2 = ||x||^2 + ||c||^2 - 2 <x, c>
+
+so the cross term is a single [BN, D] @ [D, K] matmul per tile — again
+MXU-shaped (DESIGN.md hardware-adaptation note).  N is tiled with
+BlockSpec; the full centroid block rides along in VMEM (K and D are
+small: K <= 16, D <= 8 after padding).
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pairwise_sqdist", "BLOCK_N"]
+
+BLOCK_N = 128  # rows of X per program instance
+
+
+def _dist_kernel(x_ref, c_ref, out_ref):
+    """out[bn, k] = ||x_bn||^2 + ||c_k||^2 - 2 x_bn . c_k (clamped at 0)."""
+    x = x_ref[...]                                   # [BN, D]
+    c = c_ref[...]                                   # [K, D]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)       # [BN, 1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]             # [1, K]
+    cross = jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    # numerical noise can push tiny distances below zero; clamp so the
+    # argmin/sqrt consumers never see negatives.
+    out_ref[...] = jnp.maximum(x2 + c2 - 2.0 * cross, 0.0)
+
+
+@jax.jit
+def pairwise_sqdist(x: jax.Array, c: jax.Array) -> jax.Array:
+    """Squared distances between rows of x [N, D] and c [K, D] -> [N, K].
+
+    N must be a multiple of BLOCK_N (the AOT shapes guarantee it; the
+    Rust caller pads with +inf-distance sentinel rows when needed).
+    """
+    n, d = x.shape
+    k, d2 = c.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    assert n % BLOCK_N == 0, f"N={n} not a multiple of {BLOCK_N}"
+
+    return pl.pallas_call(
+        _dist_kernel,
+        grid=(n // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x.astype(jnp.float32), c.astype(jnp.float32))

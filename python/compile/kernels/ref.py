@@ -1,0 +1,163 @@
+"""Pure-jnp / NumPy oracles for the Pallas kernels and the L2 fit.
+
+Everything here is written for clarity, not speed: the pytest suite
+asserts the Pallas kernels and the jitted L2 graphs against these
+implementations with `assert_allclose`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "ref_pairwise_sqdist",
+    "ref_surface_eval",
+    "ref_natural_spline_m",
+    "ref_spline_coeffs_1d",
+    "ref_fit_bicubic",
+    "ref_eval_bicubic_at",
+    "ref_kmeans_step",
+]
+
+
+def ref_pairwise_sqdist(x: np.ndarray, c: np.ndarray) -> np.ndarray:
+    """Naive [N, K] squared distances."""
+    diff = x[:, None, :] - c[None, :, :]
+    return np.maximum((diff**2).sum(axis=2), 0.0)
+
+
+def ref_surface_eval(coeffs: np.ndarray, rf: int) -> np.ndarray:
+    """Scalar-loop dense evaluation matching kernels.spline_eval."""
+    s, gp1, gc1, _ = coeffs.shape
+    out = np.zeros((s, gp1 * rf, gc1 * rf), dtype=np.float64)
+    for si in range(s):
+        for i in range(gp1):
+            for j in range(gc1):
+                cc = coeffs[si, i, j]
+                for qi in range(rf):
+                    u = qi / rf
+                    for qj in range(rf):
+                        v = qj / rf
+                        acc = 0.0
+                        for a in range(4):
+                            for b in range(4):
+                                acc += cc[4 * a + b] * u**a * v**b
+                        out[si, i * rf + qi, j * rf + qj] = acc
+    return out
+
+
+def ref_natural_spline_m(xs: np.ndarray, ys: np.ndarray) -> np.ndarray:
+    """Second derivatives M of the natural cubic spline through (xs, ys).
+
+    ys may be [N] or [..., N] (batched along leading axes).
+    """
+    xs = np.asarray(xs, dtype=np.float64)
+    ys = np.asarray(ys, dtype=np.float64)
+    n = xs.shape[0]
+    h = np.diff(xs)  # [n-1]
+    batch = ys.shape[:-1]
+    ys2 = ys.reshape(-1, n)
+    m = np.zeros_like(ys2)
+    if n > 2:
+        # tridiagonal system for M[1..n-2]
+        a = h[:-1] / 6.0                      # sub-diagonal
+        b = (h[:-1] + h[1:]) / 3.0            # diagonal
+        c = h[1:] / 6.0                       # super-diagonal
+        rhs = (ys2[:, 2:] - ys2[:, 1:-1]) / h[1:] - (
+            ys2[:, 1:-1] - ys2[:, :-2]
+        ) / h[:-1]
+        # Thomas solve per batch row
+        k = n - 2
+        for r in range(ys2.shape[0]):
+            cp = np.zeros(k)
+            dp = np.zeros(k)
+            cp[0] = c[0] / b[0]
+            dp[0] = rhs[r, 0] / b[0]
+            for i in range(1, k):
+                denom = b[i] - a[i] * cp[i - 1]
+                cp[i] = c[i] / denom if i < k - 1 else 0.0
+                dp[i] = (rhs[r, i] - a[i] * dp[i - 1]) / denom
+            sol = np.zeros(k)
+            sol[-1] = dp[-1]
+            for i in range(k - 2, -1, -1):
+                sol[i] = dp[i] - cp[i] * sol[i + 1]
+            m[r, 1:-1] = sol
+    return m.reshape(*batch, n)
+
+
+def ref_spline_coeffs_1d(xs: np.ndarray, ys: np.ndarray) -> np.ndarray:
+    """Per-interval cubic coefficients in *normalized* local coordinates.
+
+    Returns coeffs [..., N-1, 4] with
+        g_i(u) = c0 + c1*u + c2*u^2 + c3*u^3,   u = (x - xs[i]) / h_i.
+    """
+    xs = np.asarray(xs, dtype=np.float64)
+    ys = np.asarray(ys, dtype=np.float64)
+    m = ref_natural_spline_m(xs, ys)
+    h = np.diff(xs)
+    yi = ys[..., :-1]
+    yi1 = ys[..., 1:]
+    mi = m[..., :-1]
+    mi1 = m[..., 1:]
+    # unnormalized: a0 + a1 t + a2 t^2 + a3 t^3, t = x - xs[i]
+    a0 = yi
+    a1 = (yi1 - yi) / h - h * (2.0 * mi + mi1) / 6.0
+    a2 = mi / 2.0
+    a3 = (mi1 - mi) / (6.0 * h)
+    # normalize: u = t / h  =>  c_k = a_k * h^k
+    return np.stack([a0, a1 * h, a2 * h**2, a3 * h**3], axis=-1)
+
+
+def ref_fit_bicubic(xs: np.ndarray, ys: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Tensor-product natural bicubic fit (spline-of-splines).
+
+    xs [GP] knots along p (rows), ys [GC] knots along cc (columns),
+    values [S, GP, GC].  Returns coeffs [S, GP-1, GC-1, 16] with
+    k = 4a+b the coefficient of u^a v^b (u along p, v along cc) in
+    normalized local coordinates.
+    """
+    values = np.asarray(values, dtype=np.float64)
+    s, gp, gc = values.shape
+    # 1) spline along cc for every (surface, row): [S, GP, GC-1, 4] over v
+    row_coeffs = ref_spline_coeffs_1d(ys, values)
+    # 2) spline along p for every (interval j, coeff b):
+    #    treat row_coeffs[s, :, j, b] as samples of a function of p
+    swapped = np.moveaxis(row_coeffs, 1, -1)  # [S, GC-1, 4, GP]
+    col_coeffs = ref_spline_coeffs_1d(xs, swapped)  # [S, GC-1, 4, GP-1, 4]
+    # rearrange to [S, GP-1, GC-1, 4(a), 4(b)]
+    out = np.transpose(col_coeffs, (0, 3, 1, 4, 2))
+    return out.reshape(s, gp - 1, gc - 1, 16)
+
+
+def ref_eval_bicubic_at(
+    xs: np.ndarray, ys: np.ndarray, coeffs: np.ndarray, p: float, cc: float
+) -> np.ndarray:
+    """Evaluate [S] surfaces at one (p, cc) point from patch coefficients."""
+    xs = np.asarray(xs, dtype=np.float64)
+    ys = np.asarray(ys, dtype=np.float64)
+    i = int(np.clip(np.searchsorted(xs, p, side="right") - 1, 0, len(xs) - 2))
+    j = int(np.clip(np.searchsorted(ys, cc, side="right") - 1, 0, len(ys) - 2))
+    u = (p - xs[i]) / (xs[i + 1] - xs[i])
+    v = (cc - ys[j]) / (ys[j + 1] - ys[j])
+    c = coeffs[:, i, j, :]  # [S, 16]
+    acc = np.zeros(coeffs.shape[0])
+    for a in range(4):
+        for b in range(4):
+            acc += c[:, 4 * a + b] * u**a * v**b
+    return acc
+
+
+def ref_kmeans_step(x: np.ndarray, c: np.ndarray):
+    """One Lloyd iteration: (new_centroids, assignments, inertia).
+
+    Empty clusters keep their previous centroid (matching L2 semantics).
+    """
+    d = ref_pairwise_sqdist(x, c)
+    assign = d.argmin(axis=1)
+    inertia = d[np.arange(x.shape[0]), assign].sum()
+    new_c = c.copy().astype(np.float64)
+    for k in range(c.shape[0]):
+        mask = assign == k
+        if mask.any():
+            new_c[k] = x[mask].mean(axis=0)
+    return new_c, assign, inertia

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: dense evaluation of batched bicubic spline surfaces.
+
+The offline phase of the two-phase model (Nine & Kosar 2018) needs every
+throughput surface evaluated on a *fine* (p, cc) grid: the Hessian maxima
+test, the sampling-region score (Eq 17-19) and the Fig-4b accuracy bench
+all consume dense evaluations of many surfaces at once.  That dense
+refinement is the compute hot-spot, so it lives here as a Pallas kernel.
+
+Representation
+--------------
+A surface is a (GP-1) x (GC-1) grid of bicubic patches.  Patch (i, j)
+stores 16 coefficients c[k], k = 4*a + b, for the polynomial
+
+    f(u, v) = sum_{a,b in 0..3} c[4a+b] * u^a * v^b
+
+in *normalized local coordinates* u, v in [0, 1) (the fit in
+`compile.model` folds the knot spacings h into the coefficients).  Using
+normalized coordinates lets every patch share one precomputed Vandermonde
+matrix V[RF*RF, 16] over the refinement offsets, turning the whole
+evaluation into an MXU-shaped contraction
+
+    dense_patch[RF*RF, GC-1] = V[RF*RF, 16] @ coeffs_row[GC-1, 16].T
+
+instead of scalar Horner loops — this is the TPU adaptation called out in
+DESIGN.md: the refinement work is expressed as a matmul so the MXU (not
+the VPU) does it, and BlockSpec streams one (surface, patch-row) block
+through VMEM at a time.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["refinement_vandermonde", "surface_eval"]
+
+
+def refinement_vandermonde(rf: int, dtype=jnp.float32) -> jax.Array:
+    """V[rf*rf, 16] with V[qi*rf + qj, 4a+b] = (qi/rf)^a * (qj/rf)^b.
+
+    Row q enumerates the rf x rf refinement offsets of one patch in
+    row-major order; column k = 4a+b matches the coefficient layout of
+    `compile.model.fit_bicubic`.
+    """
+    u = jnp.arange(rf, dtype=dtype) / rf  # left-closed sample points
+    pows = jnp.stack([u**0, u, u**2, u**3], axis=1)  # [rf, 4]
+    # outer product over (qi, a) x (qj, b) -> [rf, rf, 4, 4]
+    v4 = pows[:, None, :, None] * pows[None, :, None, :]
+    return v4.reshape(rf * rf, 16)
+
+
+def _eval_kernel(coeffs_ref, vand_ref, out_ref, *, rf: int, gc1: int):
+    """One program instance: one (surface, patch-row) block.
+
+    coeffs_ref : [1, 1, gc1, 16]  patch coefficients of this row
+    vand_ref   : [rf*rf, 16]      shared Vandermonde matrix
+    out_ref    : [1, rf, gc1*rf]  dense evaluation of the row
+    """
+    coeffs = coeffs_ref[0, 0]                       # [gc1, 16]
+    vand = vand_ref[...]                            # [rf*rf, 16]
+    # MXU contraction: all refinement points of all patches in the row.
+    dense = jnp.dot(
+        vand, coeffs.T, preferred_element_type=jnp.float32
+    )                                               # [rf*rf, gc1]
+    # (qi, qj, j) -> (qi, j, qj): row-major within each patch row.
+    dense = dense.reshape(rf, rf, gc1).transpose(0, 2, 1)
+    out_ref[0] = dense.reshape(rf, gc1 * rf)
+
+
+@functools.partial(jax.jit, static_argnames=("rf",))
+def surface_eval(coeffs: jax.Array, rf: int = 8) -> jax.Array:
+    """Densely evaluate batched bicubic surfaces.
+
+    Parameters
+    ----------
+    coeffs : [S, GP-1, GC-1, 16] float32
+        Per-patch polynomial coefficients in normalized local coordinates.
+    rf : int
+        Refinement factor: each patch contributes an rf x rf tile.
+
+    Returns
+    -------
+    dense : [S, (GP-1)*rf, (GC-1)*rf] float32
+        dense[s, i*rf + qi, j*rf + qj] = f_s,patch(i,j)(qi/rf, qj/rf)
+    """
+    s, gp1, gc1, ncoef = coeffs.shape
+    assert ncoef == 16, f"expected 16 bicubic coefficients, got {ncoef}"
+    vand = refinement_vandermonde(rf, coeffs.dtype)
+
+    kernel = functools.partial(_eval_kernel, rf=rf, gc1=gc1)
+    return pl.pallas_call(
+        kernel,
+        grid=(s, gp1),
+        in_specs=[
+            pl.BlockSpec((1, 1, gc1, 16), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((rf * rf, 16), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rf, gc1 * rf), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, gp1 * rf, gc1 * rf), coeffs.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(coeffs, vand)

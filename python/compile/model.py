@@ -1,0 +1,170 @@
+"""L2: JAX compute graphs for the two-phase model's offline analysis.
+
+Three jitted entry points, each AOT-lowered to HLO text by
+``compile.aot`` and executed from the Rust coordinator via PJRT:
+
+* ``fit_bicubic``      — tensor-product natural bicubic spline fit
+                         (values grid -> per-patch coefficients);
+* ``surface_pipeline`` — fit + Pallas dense refinement + per-surface
+                         maxima and Gaussian confidence stats, fused
+                         into one graph (one host roundtrip per batch);
+* ``kmeans_step``      — one Lloyd iteration on log feature vectors,
+                         built on the Pallas pairwise-distance kernel.
+
+The tridiagonal natural-spline systems are solved with a scan-based
+Thomas algorithm: O(N), batched, and free of LAPACK custom-calls that
+the Rust-side XLA (xla_extension 0.5.1) could not execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.pairwise_dist import pairwise_sqdist
+from .kernels.spline_eval import surface_eval
+
+__all__ = [
+    "natural_spline_m",
+    "spline_coeffs_1d",
+    "fit_bicubic",
+    "surface_pipeline",
+    "kmeans_step",
+]
+
+
+def natural_spline_m(xs: jax.Array, ys: jax.Array) -> jax.Array:
+    """Second derivatives of the natural cubic spline through (xs, ys).
+
+    xs : [N] strictly increasing knots.
+    ys : [..., N] batched values.
+    Returns M : [..., N] with M[..., 0] = M[..., -1] = 0.
+    """
+    n = xs.shape[0]
+    batch = ys.shape[:-1]
+    ysf = ys.reshape(-1, n)  # [B, N]
+    bsz = ysf.shape[0]
+
+    h = jnp.diff(xs)  # [N-1]
+    sub = h[:-1] / 6.0                    # [N-2]
+    diag = (h[:-1] + h[1:]) / 3.0
+    sup = h[1:] / 6.0
+    rhs = (ysf[:, 2:] - ysf[:, 1:-1]) / h[1:] - (
+        ysf[:, 1:-1] - ysf[:, :-2]
+    ) / h[:-1]  # [B, N-2]
+
+    # Thomas forward sweep.  The cp carry is scalar (matrix depends only
+    # on xs); dp carries the whole batch.  Zeroing sub[0] folds the first
+    # row into the same recurrence (cp_prev = dp_prev = 0 initially).
+    sub0 = sub.at[0].set(0.0)
+    rhs_t = jnp.moveaxis(rhs, -1, 0)  # [N-2, B]
+
+    def fwd(carry, inp):
+        cp_prev, dp_prev = carry
+        a_i, b_i, c_i, r_i = inp
+        denom = b_i - a_i * cp_prev
+        cp = c_i / denom
+        dp = (r_i - a_i * dp_prev) / denom
+        return (cp, dp), (cp, dp)
+
+    init = (jnp.zeros((), ysf.dtype), jnp.zeros((bsz,), ysf.dtype))
+    _, (cps, dps) = lax.scan(fwd, init, (sub0, diag, sup, rhs_t))
+
+    def bwd(sol_next, inp):
+        cp, dp = inp
+        sol = dp - cp * sol_next
+        return sol, sol
+
+    _, sols = lax.scan(bwd, jnp.zeros((bsz,), ysf.dtype), (cps, dps), reverse=True)
+    m_inner = jnp.moveaxis(sols, 0, -1)  # [B, N-2]
+    m = jnp.pad(m_inner, ((0, 0), (1, 1)))
+    return m.reshape(*batch, n)
+
+
+def spline_coeffs_1d(xs: jax.Array, ys: jax.Array) -> jax.Array:
+    """Per-interval cubic coefficients, normalized local coordinates.
+
+    Returns [..., N-1, 4]: g_i(u) = c0 + c1 u + c2 u^2 + c3 u^3 with
+    u = (x - xs[i]) / h_i.  Mirrors ``kernels.ref.ref_spline_coeffs_1d``.
+    """
+    m = natural_spline_m(xs, ys)
+    h = jnp.diff(xs)
+    yi, yi1 = ys[..., :-1], ys[..., 1:]
+    mi, mi1 = m[..., :-1], m[..., 1:]
+    a0 = yi
+    a1 = (yi1 - yi) / h - h * (2.0 * mi + mi1) / 6.0
+    a2 = mi / 2.0
+    a3 = (mi1 - mi) / (6.0 * h)
+    return jnp.stack([a0, a1 * h, a2 * h**2, a3 * h**3], axis=-1)
+
+
+@jax.jit
+def fit_bicubic(xs: jax.Array, ys: jax.Array, values: jax.Array) -> jax.Array:
+    """Tensor-product natural bicubic fit.
+
+    xs [GP] (p knots), ys [GC] (cc knots), values [S, GP, GC].
+    Returns coeffs [S, GP-1, GC-1, 16]; k = 4a+b indexes u^a v^b.
+    """
+    s, gp, gc = values.shape
+    row = spline_coeffs_1d(ys, values)            # [S, GP, GC-1, 4] (over v)
+    swapped = jnp.moveaxis(row, 1, -1)            # [S, GC-1, 4, GP]
+    col = spline_coeffs_1d(xs, swapped)           # [S, GC-1, 4, GP-1, 4]
+    out = jnp.transpose(col, (0, 3, 1, 4, 2))     # [S, GP-1, GC-1, 4a, 4b]
+    return out.reshape(s, gp - 1, gc - 1, 16)
+
+
+@functools.partial(jax.jit, static_argnames=("rf",))
+def surface_pipeline(
+    xs: jax.Array, ys: jax.Array, values: jax.Array, rf: int = 8
+):
+    """Fit + dense refinement + maxima + confidence stats, one graph.
+
+    Returns (coeffs, dense, maxv, argmax_ij, mean, std):
+      coeffs    [S, GP-1, GC-1, 16]
+      dense     [S, (GP-1)*rf, (GC-1)*rf]   (Pallas kernel)
+      maxv      [S]    max over dense refinement and the knot grid
+      argmax_ij [S, 2] refined-grid coordinates of the max (f32)
+      mean/std  [S]    Gaussian confidence stats over the knot values
+    """
+    s, gp, gc = values.shape
+    coeffs = fit_bicubic(xs, ys, values)
+    dense = surface_eval(coeffs, rf=rf)           # [S, (GP-1)rf, (GC-1)rf]
+
+    flat = dense.reshape(s, -1)
+    dense_max = jnp.max(flat, axis=1)
+    dense_arg = jnp.argmax(flat, axis=1)
+    w = dense.shape[2]
+    arg_i = (dense_arg // w).astype(jnp.float32)
+    arg_j = (dense_arg % w).astype(jnp.float32)
+
+    # the left-closed refinement never samples the far knot row/column;
+    # fold the raw knot values in so a boundary max is never missed.
+    knot_max = jnp.max(values.reshape(s, -1), axis=1)
+    maxv = jnp.maximum(dense_max, knot_max)
+
+    mean = jnp.mean(values.reshape(s, -1), axis=1)
+    std = jnp.std(values.reshape(s, -1), axis=1)
+    argmax_ij = jnp.stack([arg_i, arg_j], axis=1)
+    return coeffs, dense, maxv, argmax_ij, mean, std
+
+
+@jax.jit
+def kmeans_step(x: jax.Array, c: jax.Array):
+    """One Lloyd iteration.
+
+    x [N, D] points, c [K, D] centroids.
+    Returns (new_c [K, D], assign [N] f32, inertia [1]).
+    Empty clusters keep their previous centroid.
+    """
+    d = pairwise_sqdist(x, c)                     # [N, K] (Pallas)
+    assign = jnp.argmin(d, axis=1)                # [N]
+    k = c.shape[0]
+    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # [N, K]
+    counts = jnp.sum(onehot, axis=0)              # [K]
+    sums = jnp.dot(onehot.T, x)                   # [K, D]
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], c)
+    inertia = jnp.sum(jnp.min(d, axis=1), keepdims=True)
+    return new_c, assign.astype(jnp.float32), inertia

@@ -1,0 +1,129 @@
+"""L1 kernel correctness: Pallas kernels vs the pure oracles in ref.py.
+
+Hypothesis sweeps shapes (within the Pallas tiling constraints) and
+random inputs; assert_allclose against the scalar-loop references is the
+core correctness signal for the build-time layer.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels.pairwise_dist import BLOCK_N, pairwise_sqdist
+from compile.kernels.ref import ref_pairwise_sqdist, ref_surface_eval
+from compile.kernels.spline_eval import refinement_vandermonde, surface_eval
+
+
+# ---------------------------------------------------------------------------
+# surface_eval
+# ---------------------------------------------------------------------------
+class TestVandermonde:
+    def test_shape(self):
+        v = refinement_vandermonde(4)
+        assert v.shape == (16, 16)
+
+    def test_row_zero_is_delta(self):
+        # u = v = 0 -> only the constant term survives
+        v = np.asarray(refinement_vandermonde(8))
+        expected = np.zeros(16)
+        expected[0] = 1.0
+        assert_allclose(v[0], expected)
+
+    def test_known_entry(self):
+        rf = 4
+        v = np.asarray(refinement_vandermonde(rf))
+        # q = qi*rf + qj with qi=2, qj=3; k = 4a+b with a=3, b=1
+        qi, qj, a, b = 2, 3, 3, 1
+        assert_allclose(v[qi * rf + qj, 4 * a + b], (qi / rf) ** a * (qj / rf) ** b)
+
+
+class TestSurfaceEval:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s=st.integers(1, 4),
+        gp1=st.integers(1, 5),
+        gc1=st.integers(1, 5),
+        rf=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, s, gp1, gc1, rf, seed):
+        rng = np.random.default_rng(seed)
+        coeffs = rng.normal(size=(s, gp1, gc1, 16)).astype(np.float32)
+        got = np.asarray(surface_eval(jnp.asarray(coeffs), rf=rf))
+        want = ref_surface_eval(coeffs, rf)
+        assert got.shape == (s, gp1 * rf, gc1 * rf)
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_constant_patch(self):
+        coeffs = np.zeros((1, 2, 2, 16), dtype=np.float32)
+        coeffs[..., 0] = 7.5
+        got = np.asarray(surface_eval(jnp.asarray(coeffs), rf=4))
+        assert_allclose(got, np.full((1, 8, 8), 7.5), rtol=1e-6)
+
+    def test_linear_in_u(self):
+        # f(u, v) = u  ->  dense[qi, :] = qi/rf
+        coeffs = np.zeros((1, 1, 1, 16), dtype=np.float32)
+        coeffs[0, 0, 0, 4] = 1.0  # k = 4*1+0
+        got = np.asarray(surface_eval(jnp.asarray(coeffs), rf=8))[0]
+        for qi in range(8):
+            assert_allclose(got[qi], np.full(8, qi / 8), atol=1e-6)
+
+    def test_linear_in_v(self):
+        coeffs = np.zeros((1, 1, 1, 16), dtype=np.float32)
+        coeffs[0, 0, 0, 1] = 1.0  # k = 4*0+1
+        got = np.asarray(surface_eval(jnp.asarray(coeffs), rf=8))[0]
+        for qj in range(8):
+            assert_allclose(got[:, qj], np.full(8, qj / 8), atol=1e-6)
+
+    def test_patch_locality(self):
+        # coefficients of one patch must not leak into neighbours
+        coeffs = np.zeros((1, 2, 2, 16), dtype=np.float32)
+        coeffs[0, 1, 0, 0] = 3.0
+        got = np.asarray(surface_eval(jnp.asarray(coeffs), rf=4))[0]
+        assert_allclose(got[4:, :4], np.full((4, 4), 3.0))
+        assert_allclose(got[:4, :], 0.0)
+        assert_allclose(got[4:, 4:], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# pairwise_sqdist
+# ---------------------------------------------------------------------------
+class TestPairwiseSqdist:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        nb=st.integers(1, 3),
+        d=st.integers(1, 8),
+        k=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, nb, d, k, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(nb * BLOCK_N, d)).astype(np.float32)
+        c = rng.normal(size=(k, d)).astype(np.float32)
+        got = np.asarray(pairwise_sqdist(jnp.asarray(x), jnp.asarray(c)))
+        want = ref_pairwise_sqdist(x, c)
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_distance_on_centroid(self):
+        c = np.arange(16, dtype=np.float32).reshape(4, 4)
+        x = np.tile(c, (BLOCK_N // 4, 1))
+        got = np.asarray(pairwise_sqdist(jnp.asarray(x), jnp.asarray(c)))
+        idx = np.tile(np.arange(4), BLOCK_N // 4)
+        assert_allclose(got[np.arange(BLOCK_N), idx], 0.0, atol=1e-3)
+
+    def test_nonnegative(self):
+        rng = np.random.default_rng(0)
+        x = (1e3 * rng.normal(size=(BLOCK_N, 6))).astype(np.float32)
+        got = np.asarray(pairwise_sqdist(jnp.asarray(x), jnp.asarray(x[:8])))
+        assert (got >= 0).all()
+
+    def test_rejects_misaligned_n(self):
+        with pytest.raises(AssertionError):
+            pairwise_sqdist(jnp.zeros((100, 4)), jnp.zeros((3, 4)))
+
+    def test_rejects_dim_mismatch(self):
+        with pytest.raises(AssertionError):
+            pairwise_sqdist(jnp.zeros((BLOCK_N, 4)), jnp.zeros((3, 5)))

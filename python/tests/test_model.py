@@ -1,0 +1,251 @@
+"""L2 graph correctness: jitted model graphs vs NumPy/SciPy oracles."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+from scipy.interpolate import CubicSpline
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import (
+    ref_eval_bicubic_at,
+    ref_fit_bicubic,
+    ref_kmeans_step,
+    ref_natural_spline_m,
+    ref_pairwise_sqdist,
+    ref_spline_coeffs_1d,
+)
+
+
+def _knots(rng, n):
+    """Strictly increasing knot vector with spacing in [0.5, 2]."""
+    steps = rng.uniform(0.5, 2.0, size=n - 1)
+    return np.concatenate([[1.0], 1.0 + np.cumsum(steps)]).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# 1D spline machinery
+# ---------------------------------------------------------------------------
+class TestNaturalSplineM:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(3, 12),
+        b=st.integers(1, 5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, n, b, seed):
+        rng = np.random.default_rng(seed)
+        xs = _knots(rng, n)
+        ys = rng.normal(size=(b, n)).astype(np.float32)
+        got = np.asarray(model.natural_spline_m(jnp.asarray(xs), jnp.asarray(ys)))
+        want = ref_natural_spline_m(xs, ys)
+        assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_natural_boundary(self):
+        rng = np.random.default_rng(1)
+        xs = _knots(rng, 8)
+        ys = rng.normal(size=(3, 8)).astype(np.float32)
+        m = np.asarray(model.natural_spline_m(jnp.asarray(xs), jnp.asarray(ys)))
+        assert_allclose(m[:, 0], 0.0)
+        assert_allclose(m[:, -1], 0.0)
+
+    def test_straight_line_has_zero_curvature(self):
+        xs = np.array([0.0, 1.0, 3.0, 4.0], dtype=np.float32)
+        ys = (2.0 * xs + 1.0)[None, :]
+        m = np.asarray(model.natural_spline_m(jnp.asarray(xs), jnp.asarray(ys)))
+        assert_allclose(m, 0.0, atol=1e-5)
+
+    def test_matches_scipy(self):
+        rng = np.random.default_rng(7)
+        xs = _knots(rng, 9).astype(np.float64)
+        ys = rng.normal(size=9)
+        cs = CubicSpline(xs, ys, bc_type="natural")
+        m_scipy = cs(xs, 2)  # second derivative at knots
+        m_got = np.asarray(
+            model.natural_spline_m(
+                jnp.asarray(xs, jnp.float32), jnp.asarray(ys[None, :], jnp.float32)
+            )
+        )[0]
+        assert_allclose(m_got, m_scipy, rtol=1e-3, atol=1e-3)
+
+
+class TestSplineCoeffs1D:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(3, 10), seed=st.integers(0, 2**31 - 1))
+    def test_matches_reference(self, n, seed):
+        rng = np.random.default_rng(seed)
+        xs = _knots(rng, n)
+        ys = rng.normal(size=(2, n)).astype(np.float32)
+        got = np.asarray(model.spline_coeffs_1d(jnp.asarray(xs), jnp.asarray(ys)))
+        want = ref_spline_coeffs_1d(xs, ys)
+        assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_interpolates_knots(self):
+        rng = np.random.default_rng(3)
+        xs = _knots(rng, 7)
+        ys = rng.normal(size=(1, 7)).astype(np.float32)
+        c = np.asarray(model.spline_coeffs_1d(jnp.asarray(xs), jnp.asarray(ys)))[0]
+        # left endpoint of every interval: u=0 -> c0
+        assert_allclose(c[:, 0], ys[0, :-1], rtol=1e-5)
+        # right endpoint: u=1 -> c0+c1+c2+c3
+        assert_allclose(c.sum(axis=1), ys[0, 1:], rtol=1e-3, atol=1e-4)
+
+    def test_matches_scipy_between_knots(self):
+        rng = np.random.default_rng(11)
+        xs = _knots(rng, 8).astype(np.float64)
+        ys = rng.normal(size=8)
+        cs = CubicSpline(xs, ys, bc_type="natural")
+        c = np.asarray(
+            model.spline_coeffs_1d(
+                jnp.asarray(xs, jnp.float32), jnp.asarray(ys[None, :], jnp.float32)
+            )
+        )[0]
+        for i in range(7):
+            for u in (0.25, 0.5, 0.75):
+                x = xs[i] + u * (xs[i + 1] - xs[i])
+                val = c[i, 0] + c[i, 1] * u + c[i, 2] * u**2 + c[i, 3] * u**3
+                assert_allclose(val, cs(x), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Bicubic fit
+# ---------------------------------------------------------------------------
+class TestFitBicubic:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        s=st.integers(1, 3),
+        gp=st.integers(3, 8),
+        gc=st.integers(3, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, s, gp, gc, seed):
+        rng = np.random.default_rng(seed)
+        xs, ys = _knots(rng, gp), _knots(rng, gc)
+        v = rng.normal(size=(s, gp, gc)).astype(np.float32)
+        got = np.asarray(
+            model.fit_bicubic(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(v))
+        )
+        want = ref_fit_bicubic(xs, ys, v)
+        assert got.shape == (s, gp - 1, gc - 1, 16)
+        assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_interpolates_knot_grid(self, seed):
+        rng = np.random.default_rng(seed)
+        gp, gc = 6, 5
+        xs, ys = _knots(rng, gp), _knots(rng, gc)
+        v = rng.normal(size=(2, gp, gc)).astype(np.float32)
+        coeffs = np.asarray(
+            model.fit_bicubic(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(v))
+        )
+        for i in range(gp):
+            for j in range(gc):
+                got = ref_eval_bicubic_at(xs, ys, coeffs, float(xs[i]), float(ys[j]))
+                assert_allclose(got, v[:, i, j], rtol=2e-3, atol=2e-3)
+
+    def test_separable_product_surface(self):
+        # f(p, cc) = p * cc is exactly representable (bilinear) and must
+        # be reproduced everywhere, not just at knots.
+        xs = np.array([1.0, 2.0, 4.0, 8.0], dtype=np.float32)
+        ys = np.array([1.0, 3.0, 5.0], dtype=np.float32)
+        v = (xs[:, None] * ys[None, :])[None].astype(np.float32)
+        coeffs = np.asarray(
+            model.fit_bicubic(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(v))
+        )
+        for p in np.linspace(1.0, 8.0, 13):
+            for cc in np.linspace(1.0, 5.0, 9):
+                got = ref_eval_bicubic_at(xs, ys, coeffs, float(p), float(cc))
+                assert_allclose(got[0], p * cc, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# surface_pipeline
+# ---------------------------------------------------------------------------
+class TestSurfacePipeline:
+    def _run(self, seed=0, s=3, gp=6, gc=6, rf=4):
+        rng = np.random.default_rng(seed)
+        xs, ys = _knots(rng, gp), _knots(rng, gc)
+        v = rng.uniform(1.0, 10.0, size=(s, gp, gc)).astype(np.float32)
+        out = model.surface_pipeline(
+            jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(v), rf=rf
+        )
+        return xs, ys, v, [np.asarray(o) for o in out]
+
+    def test_shapes(self):
+        _, _, v, (coeffs, dense, maxv, argmax, mean, std) = self._run()
+        s, gp, gc = v.shape
+        assert coeffs.shape == (s, gp - 1, gc - 1, 16)
+        assert dense.shape == (s, (gp - 1) * 4, (gc - 1) * 4)
+        assert maxv.shape == (s,)
+        assert argmax.shape == (s, 2)
+        assert mean.shape == (s,)
+        assert std.shape == (s,)
+
+    def test_max_dominates_knots_and_dense(self):
+        _, _, v, (coeffs, dense, maxv, argmax, mean, std) = self._run(seed=5)
+        for si in range(v.shape[0]):
+            assert maxv[si] >= v[si].max() - 1e-4
+            assert maxv[si] >= dense[si].max() - 1e-4
+
+    def test_argmax_points_at_dense_max(self):
+        _, _, v, (coeffs, dense, maxv, argmax, mean, std) = self._run(seed=9)
+        for si in range(v.shape[0]):
+            i, j = int(argmax[si, 0]), int(argmax[si, 1])
+            assert_allclose(dense[si, i, j], dense[si].max(), rtol=1e-5)
+
+    def test_confidence_stats(self):
+        _, _, v, (coeffs, dense, maxv, argmax, mean, std) = self._run(seed=2)
+        assert_allclose(mean, v.reshape(v.shape[0], -1).mean(axis=1), rtol=1e-4)
+        assert_allclose(std, v.reshape(v.shape[0], -1).std(axis=1), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# kmeans_step
+# ---------------------------------------------------------------------------
+class TestKmeansStep:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        k=st.integers(2, 16),
+        d=st.integers(2, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, k, d, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(256, d)).astype(np.float32)
+        c = rng.normal(size=(k, d)).astype(np.float32)
+        new_c, assign, inertia = [
+            np.asarray(o) for o in model.kmeans_step(jnp.asarray(x), jnp.asarray(c))
+        ]
+        want_c, want_assign, want_inertia = ref_kmeans_step(x, c)
+        assert_allclose(assign, want_assign)
+        assert_allclose(new_c, want_c, rtol=1e-3, atol=1e-3)
+        assert_allclose(inertia[0], want_inertia, rtol=1e-3)
+
+    def test_empty_cluster_keeps_centroid(self):
+        x = np.ones((128, 4), dtype=np.float32)
+        c = np.stack(
+            [np.ones(4, np.float32), np.full(4, 100.0, np.float32)]
+        )
+        new_c, assign, _ = [
+            np.asarray(o) for o in model.kmeans_step(jnp.asarray(x), jnp.asarray(c))
+        ]
+        assert (assign == 0).all()
+        assert_allclose(new_c[1], c[1])  # untouched
+
+    def test_inertia_decreases_under_iteration(self):
+        rng = np.random.default_rng(42)
+        centers = rng.normal(scale=10.0, size=(4, 6))
+        x = (
+            centers[rng.integers(0, 4, size=512)]
+            + rng.normal(scale=0.5, size=(512, 6))
+        ).astype(np.float32)
+        c = x[:4].copy()
+        prev = np.inf
+        for _ in range(5):
+            c_j, _, inertia = model.kmeans_step(jnp.asarray(x), jnp.asarray(c))
+            c = np.asarray(c_j)
+            val = float(np.asarray(inertia)[0])
+            assert val <= prev + 1e-3
+            prev = val

@@ -1,0 +1,9 @@
+//! Regenerates the paper's fig4a (see DESIGN.md §5). `harness = false`:
+//! the in-tree timer harness replaces criterion (offline registry).
+
+fn main() {
+    let (_, elapsed) = twophase::util::timer::time_once(|| {
+        twophase::experiments::fig4a::run()
+    });
+    println!("[bench] exp_fig4a completed in {elapsed:?}");
+}

@@ -1,0 +1,9 @@
+//! Regenerates the paper's fig4b (see DESIGN.md §5). `harness = false`:
+//! the in-tree timer harness replaces criterion (offline registry).
+
+fn main() {
+    let (_, elapsed) = twophase::util::timer::time_once(|| {
+        twophase::experiments::fig4b::run()
+    });
+    println!("[bench] exp_fig4b completed in {elapsed:?}");
+}

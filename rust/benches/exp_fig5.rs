@@ -1,0 +1,9 @@
+//! Regenerates the paper's fig5 (see DESIGN.md §5). `harness = false`:
+//! the in-tree timer harness replaces criterion (offline registry).
+
+fn main() {
+    let (_, elapsed) = twophase::util::timer::time_once(|| {
+        twophase::experiments::fig5::run()
+    });
+    println!("[bench] exp_fig5 completed in {elapsed:?}");
+}

@@ -1,0 +1,9 @@
+//! Regenerates the paper's fig6 (see DESIGN.md §5). `harness = false`:
+//! the in-tree timer harness replaces criterion (offline registry).
+
+fn main() {
+    let (_, elapsed) = twophase::util::timer::time_once(|| {
+        twophase::experiments::fig6::run()
+    });
+    println!("[bench] exp_fig6 completed in {elapsed:?}");
+}

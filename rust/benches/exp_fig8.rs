@@ -1,0 +1,9 @@
+//! Regenerates the paper's fig8 (see DESIGN.md §5). `harness = false`:
+//! the in-tree timer harness replaces criterion (offline registry).
+
+fn main() {
+    let (_, elapsed) = twophase::util::timer::time_once(|| {
+        twophase::experiments::fig8::run()
+    });
+    println!("[bench] exp_fig8 completed in {elapsed:?}");
+}

@@ -1,0 +1,12 @@
+//! Regenerates Figures 2/9/10 + the §5.4 fairness numbers
+//! (multi-user contention on Chameleon).  `harness = false`.
+
+fn main() {
+    let (res, elapsed) = twophase::util::timer::time_once(|| {
+        twophase::experiments::fig9::run()
+    });
+    // headline guardrails printed for EXPERIMENTS.md
+    let asm = res.aggregate(twophase::baselines::api::OptimizerKind::Asm);
+    let noopt = res.aggregate(twophase::baselines::api::OptimizerKind::NoOpt);
+    println!("[bench] exp_fig9_multiuser completed in {elapsed:?} (ASM/NoOpt = {:.1}x)", asm / noopt.max(1e-9));
+}

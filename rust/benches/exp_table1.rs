@@ -1,0 +1,9 @@
+//! Regenerates the paper's table1 (see DESIGN.md §5). `harness = false`:
+//! the in-tree timer harness replaces criterion (offline registry).
+
+fn main() {
+    let (_, elapsed) = twophase::util::timer::time_once(|| {
+        twophase::experiments::table1::run()
+    });
+    println!("[bench] exp_table1 completed in {elapsed:?}");
+}

@@ -1,0 +1,86 @@
+//! §Perf microbenches: the hot paths of each layer, timed with the
+//! in-tree harness (criterion is unavailable offline — DESIGN.md §4).
+//!
+//! * L3 simulator tick rate and ASM decision latency (must be
+//!   negligible next to a chunk transfer);
+//! * native vs PJRT surface pipeline (L2+L1 through the artifacts);
+//! * offline pipeline end-to-end on a six-week corpus.
+
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::offline::surface::{knot_lattice, NativeSurfaceBackend, SurfaceBackend};
+use twophase::online::controller::DynamicTuner;
+use twophase::runtime::accel::PjrtSurfaceBackend;
+use twophase::runtime::engine::Engine;
+use twophase::sim::dataset::Dataset;
+use twophase::sim::profile::NetProfile;
+use twophase::sim::traffic::TrafficProcess;
+use twophase::sim::transfer::ThroughputModel;
+use twophase::util::rng::Rng;
+use twophase::util::timer::bench;
+use twophase::Params;
+
+fn main() {
+    // --- L3: simulator steady-state evaluation ------------------------
+    let profile = NetProfile::xsede();
+    let model = ThroughputModel::new(profile.clone());
+    let load = TrafficProcess::fixed(&profile, 0.3);
+    let dataset = Dataset::new(256, 256.0);
+    let r = bench("sim::steady (single eval)", 100, 1000, || {
+        std::hint::black_box(model.steady(Params::new(8, 4, 8), &dataset, &load));
+    });
+    println!(
+        "  -> {:.2} M evals/s",
+        1e9 / r.median_ns() / 1e6
+    );
+
+    // --- L3: ASM decision latency -------------------------------------
+    let logs = generate_history(
+        &profile,
+        &GeneratorConfig {
+            days: 7.0,
+            transfers_per_hour: 8.0,
+            seed: 42,
+        },
+    );
+    let kb = KnowledgeBase::build_native(logs.clone(), OfflineConfig::default());
+    let set = kb
+        .query(profile.rtt_s, profile.bandwidth_mbps, 256.0, 256)
+        .expect("kb built")
+        .clone();
+    bench("online::asm decision (observe)", 100, 1000, || {
+        let mut tuner = DynamicTuner::with_defaults(set.clone());
+        std::hint::black_box(tuner.observe(1000.0));
+    });
+
+    // --- offline pipeline end-to-end ----------------------------------
+    bench("offline::KnowledgeBase::build (7-day corpus)", 1, 5, || {
+        std::hint::black_box(KnowledgeBase::build_native(
+            logs.clone(),
+            OfflineConfig::default(),
+        ));
+    });
+
+    // --- L2+L1: surface fit+refine, native vs PJRT --------------------
+    let xs = knot_lattice();
+    let mut rng = Rng::new(7);
+    let grids: Vec<Vec<Vec<f64>>> = (0..16)
+        .map(|_| {
+            (0..xs.len())
+                .map(|_| (0..xs.len()).map(|_| rng.uniform(10.0, 1000.0)).collect())
+                .collect()
+        })
+        .collect();
+    bench("surface fit+refine x16 (native)", 3, 30, || {
+        std::hint::black_box(NativeSurfaceBackend.fit_batch(&xs, &xs, &grids, 8));
+    });
+    match Engine::try_default() {
+        Some(engine) => {
+            let backend = PjrtSurfaceBackend::new(engine);
+            bench("surface fit+refine x16 (PJRT artifacts)", 3, 30, || {
+                std::hint::black_box(backend.fit_batch(&xs, &xs, &grids, 8));
+            });
+        }
+        None => println!("(PJRT artifacts not built; skipping accelerated bench)"),
+    }
+}

@@ -1,0 +1,148 @@
+//! The uniform optimizer interface every §5 model implements.
+
+use crate::online::controller::DynamicTuner;
+use crate::sim::multiuser::{UserCtx, UserPolicy};
+use crate::Params;
+
+/// A transfer-parameter optimizer driving one transfer.
+///
+/// The engine calls [`Optimizer::next_params`] before every chunk with
+/// the previous chunk's measured throughput (None before the first).
+pub trait Optimizer {
+    fn name(&self) -> &'static str;
+
+    fn next_params(&mut self, last_th: Option<f64>) -> Params;
+
+    /// The model's own prediction of achievable throughput at its
+    /// current parameters, if it makes one (Fig 8 accuracy metric).
+    fn predicted_th(&self) -> Option<f64> {
+        None
+    }
+
+    /// Number of dedicated sample transfers the model has consumed.
+    fn samples_used(&self) -> usize {
+        0
+    }
+}
+
+/// Identifier for the seven evaluated models (drives the Fig 5 matrix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Asm,
+    Harp,
+    AnnOt,
+    Globus,
+    StaticAnn,
+    SingleChunk,
+    NelderMead,
+    NoOpt,
+}
+
+impl OptimizerKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Asm => "ASM",
+            Self::Harp => "HARP",
+            Self::AnnOt => "ANN+OT",
+            Self::Globus => "GO",
+            Self::StaticAnn => "SP",
+            Self::SingleChunk => "SC",
+            Self::NelderMead => "NMT",
+            Self::NoOpt => "NoOpt",
+        }
+    }
+
+    pub fn all() -> [OptimizerKind; 8] {
+        [
+            Self::Asm,
+            Self::Harp,
+            Self::AnnOt,
+            Self::Globus,
+            Self::StaticAnn,
+            Self::SingleChunk,
+            Self::NelderMead,
+            Self::NoOpt,
+        ]
+    }
+}
+
+/// The §5.4 "No Optimization" baseline: cc = p = pp = 1 forever.
+#[derive(Debug, Default)]
+pub struct NoOptimization;
+
+impl Optimizer for NoOptimization {
+    fn name(&self) -> &'static str {
+        "NoOpt"
+    }
+
+    fn next_params(&mut self, _last_th: Option<f64>) -> Params {
+        Params::DEFAULT
+    }
+}
+
+/// Our model behind the same interface (wraps the online controller).
+pub struct AsmOptimizer {
+    pub tuner: DynamicTuner,
+}
+
+impl AsmOptimizer {
+    pub fn new(tuner: DynamicTuner) -> AsmOptimizer {
+        AsmOptimizer { tuner }
+    }
+}
+
+impl Optimizer for AsmOptimizer {
+    fn name(&self) -> &'static str {
+        "ASM"
+    }
+
+    fn next_params(&mut self, last_th: Option<f64>) -> Params {
+        match last_th {
+            None => self.tuner.params(),
+            Some(th) => self.tuner.observe(th),
+        }
+    }
+
+    fn predicted_th(&self) -> Option<f64> {
+        Some(self.tuner.predicted())
+    }
+
+    fn samples_used(&self) -> usize {
+        self.tuner.samples_used()
+    }
+}
+
+/// Adapter: any Optimizer is a multi-user policy.
+pub struct PolicyAdapter<O: Optimizer>(pub O);
+
+impl<O: Optimizer> UserPolicy for PolicyAdapter<O> {
+    fn decide(&mut self, ctx: &UserCtx) -> Params {
+        self.0.next_params(ctx.last_throughput)
+    }
+
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noopt_is_all_ones() {
+        let mut o = NoOptimization;
+        assert_eq!(o.next_params(None), Params::DEFAULT);
+        assert_eq!(o.next_params(Some(123.0)), Params::DEFAULT);
+        assert_eq!(o.predicted_th(), None);
+    }
+
+    #[test]
+    fn kind_labels_unique() {
+        let labels: Vec<&str> = OptimizerKind::all().iter().map(|k| k.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len());
+    }
+}

@@ -1,0 +1,64 @@
+//! GO — the Globus Online static baseline [21].
+//!
+//! Globus picks fixed parameter sets keyed on dataset file-size class
+//! ("Globus uses different static parameter settings for different
+//! types of file sizes", §5) — no network awareness, no adaptation.
+//! Values follow the published Globus transfer presets: modest
+//! concurrency, pipelining for lots of small files, parallelism for
+//! big ones.
+
+use crate::baselines::api::Optimizer;
+use crate::sim::dataset::{Dataset, FileSizeClass};
+use crate::Params;
+
+#[derive(Debug, Clone)]
+pub struct Globus {
+    params: Params,
+}
+
+impl Globus {
+    pub fn for_dataset(dataset: &Dataset) -> Globus {
+        let params = match dataset.class() {
+            // many small files: pipeline hard, two concurrent channels
+            FileSizeClass::Small => Params::new(2, 1, 20),
+            // the middle preset
+            FileSizeClass::Medium => Params::new(4, 2, 5),
+            // few big files: parallel streams
+            FileSizeClass::Large => Params::new(2, 4, 2),
+        };
+        Globus { params }
+    }
+}
+
+impl Optimizer for Globus {
+    fn name(&self) -> &'static str {
+        "GO"
+    }
+
+    fn next_params(&mut self, _last_th: Option<f64>) -> Params {
+        self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_presets() {
+        let mut small = Globus::for_dataset(&Dataset::new(10_000, 1.0));
+        assert_eq!(small.next_params(None).pp, 20);
+        let mut large = Globus::for_dataset(&Dataset::new(16, 2_048.0));
+        assert_eq!(large.next_params(None).p, 4);
+    }
+
+    #[test]
+    fn static_regardless_of_feedback() {
+        let mut g = Globus::for_dataset(&Dataset::new(100, 100.0));
+        let a = g.next_params(None);
+        let b = g.next_params(Some(1.0));
+        let c = g.next_params(Some(1e6));
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+}

@@ -1,0 +1,191 @@
+//! HARP — Arslan, Guner & Kosar, SC'16 [24]: the paper's closest
+//! competitor.
+//!
+//! HARP "uses heuristics to perform a sample transfer. Then the model
+//! performs online optimization to get suitable parameters and starts
+//! transferring the rest of the dataset" — per request, every time.
+//! Our implementation:
+//!
+//! 1. three heuristic sample transfers spanning the parameter diagonal
+//!    (low / BDP-scaled / high), as the published HARP probes;
+//! 2. an online quadratic-regression fit over the samples (HARP's
+//!    per-request optimization — the expensive step the two-phase model
+//!    amortizes offline);
+//! 3. argmax of the regression on the bounded grid → stream.
+//!
+//! HARP never re-tunes after the initial probing (§5.4: "HARP does not
+//! have this ability as it sets the parameters at the beginning").
+
+use crate::baselines::api::Optimizer;
+use crate::offline::regression::{Degree, PolySurface};
+use crate::sim::dataset::Dataset;
+use crate::sim::profile::NetProfile;
+use crate::Params;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HarpPhase {
+    Probing(usize),
+    Streaming,
+}
+
+#[derive(Debug, Clone)]
+pub struct Harp {
+    probes: Vec<Params>,
+    observations: Vec<(Params, f64)>,
+    phase: HarpPhase,
+    chosen: Params,
+    predicted: Option<f64>,
+    max_param: u32,
+}
+
+impl Harp {
+    pub fn plan(profile: &NetProfile, dataset: &Dataset) -> Harp {
+        let cap = profile.max_param;
+        let bdp_mb = profile.bdp_mb().max(0.05);
+        // heuristic probe ladder: conservative, BDP-informed, aggressive
+        let mid_p = ((bdp_mb / dataset.avg_file_mb).ceil() as u32).clamp(1, cap / 2);
+        let mid_cc = ((dataset.n_files as f64 / 128.0).ceil() as u32).clamp(2, cap / 2);
+        let pp = if dataset.avg_file_mb < 10.0 { 16 } else { 4 };
+        let probes = vec![
+            Params::new(2, 1, pp),
+            Params::new(mid_cc, mid_p.max(2), pp),
+            Params::new((mid_cc * 4).min(cap), (mid_p * 4).clamp(2, cap), pp),
+        ];
+        Harp {
+            chosen: probes[0],
+            probes,
+            observations: Vec::new(),
+            phase: HarpPhase::Probing(0),
+            predicted: None,
+            max_param: cap,
+        }
+    }
+
+    /// The regression fit + argmax (HARP's online optimization step).
+    fn optimize(&mut self) {
+        // quadratic needs >= 10 coefficients; with 3 probes the ridge
+        // term in `least_squares` keeps it solvable, matching HARP's
+        // reduced quadratic (it fixes cross terms with few samples).
+        if let Some(m) = PolySurface::fit(Degree::Quadratic, &self.observations) {
+            let (best, pred) = m.argmax_on_grid(self.max_param);
+            self.chosen = best;
+            self.predicted = Some(pred);
+        } else if let Some((best, th)) = self
+            .observations
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        {
+            self.chosen = *best;
+            self.predicted = Some(*th);
+        }
+    }
+}
+
+impl Optimizer for Harp {
+    fn name(&self) -> &'static str {
+        "HARP"
+    }
+
+    fn next_params(&mut self, last_th: Option<f64>) -> Params {
+        match self.phase {
+            HarpPhase::Probing(i) => {
+                if let Some(th) = last_th {
+                    if i > 0 {
+                        self.observations.push((self.probes[i - 1], th));
+                    }
+                }
+                if i < self.probes.len() {
+                    self.phase = HarpPhase::Probing(i + 1);
+                    self.probes[i]
+                } else {
+                    self.optimize();
+                    self.phase = HarpPhase::Streaming;
+                    self.chosen
+                }
+            }
+            HarpPhase::Streaming => {
+                // collect the final probe's observation exactly once
+                if self.observations.len() < self.probes.len() {
+                    if let Some(th) = last_th {
+                        self.observations.push((self.probes[self.probes.len() - 1], th));
+                        self.optimize();
+                    }
+                }
+                self.chosen
+            }
+        }
+    }
+
+    fn predicted_th(&self) -> Option<f64> {
+        self.predicted
+    }
+
+    fn samples_used(&self) -> usize {
+        self.observations.len().min(self.probes.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn harp() -> Harp {
+        Harp::plan(&NetProfile::xsede(), &Dataset::new(256, 512.0))
+    }
+
+    #[test]
+    fn probes_then_streams() {
+        let mut h = harp();
+        let p1 = h.next_params(None);
+        let p2 = h.next_params(Some(100.0));
+        let p3 = h.next_params(Some(400.0));
+        assert_ne!(p1, p3);
+        // 4th call: optimization happened, streaming begins
+        let p4 = h.next_params(Some(900.0));
+        let p5 = h.next_params(Some(900.0));
+        // once the final probe's observation lands, the choice is fixed
+        let p6 = h.next_params(Some(900.0));
+        assert_eq!(p5, p6);
+        let _ = (p2, p4);
+        assert_eq!(h.samples_used(), 3);
+        assert!(h.predicted_th().is_some());
+    }
+
+    #[test]
+    fn picks_high_stream_params_when_throughput_rises_with_streams() {
+        let mut h = harp();
+        let probes = h.probes.clone();
+        let th = |q: Params| 100.0 * (q.total_streams() as f64).sqrt();
+        h.next_params(None);
+        h.next_params(Some(th(probes[0])));
+        h.next_params(Some(th(probes[1])));
+        h.next_params(Some(th(probes[2])));
+        let chosen = h.next_params(Some(0.0));
+        assert!(
+            chosen.total_streams() >= probes[1].total_streams(),
+            "chosen {chosen}"
+        );
+    }
+
+    #[test]
+    fn never_retunes_after_streaming() {
+        let mut h = harp();
+        for th in [Some(500.0), Some(600.0), Some(700.0), Some(650.0)] {
+            h.next_params(th);
+        }
+        let chosen = h.next_params(Some(650.0));
+        // feed wildly different throughputs: HARP must not move
+        for th in [10.0, 10_000.0, 1.0] {
+            assert_eq!(h.next_params(Some(th)), chosen);
+        }
+    }
+
+    #[test]
+    fn probe_ladder_is_increasing() {
+        let h = harp();
+        assert!(h.probes[0].total_streams() < h.probes[2].total_streams());
+        for p in &h.probes {
+            assert!(p.cc <= 32 && p.p <= 32);
+        }
+    }
+}

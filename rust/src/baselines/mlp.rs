@@ -1,0 +1,188 @@
+//! A minimal multilayer perceptron with SGD training — the substrate
+//! for the Static-ANN (SP) and ANN+OT baselines [22].  tanh hidden
+//! layers, linear output, mean-squared-error loss, no external deps.
+
+use crate::util::rng::Rng;
+
+/// Fully-connected feed-forward network.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    /// layer sizes, e.g. [4, 16, 8, 3]
+    pub sizes: Vec<usize>,
+    /// weights[l][i][j]: layer l, output unit i, input unit j
+    weights: Vec<Vec<Vec<f64>>>,
+    biases: Vec<Vec<f64>>,
+}
+
+impl Mlp {
+    /// Xavier-ish random initialization.
+    pub fn new(sizes: &[usize], rng: &mut Rng) -> Mlp {
+        assert!(sizes.len() >= 2);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..sizes.len() - 1 {
+            let (fan_in, fan_out) = (sizes[l], sizes[l + 1]);
+            let scale = (2.0 / (fan_in + fan_out) as f64).sqrt();
+            weights.push(
+                (0..fan_out)
+                    .map(|_| (0..fan_in).map(|_| rng.normal() * scale).collect())
+                    .collect(),
+            );
+            biases.push(vec![0.0; fan_out]);
+        }
+        Mlp {
+            sizes: sizes.to_vec(),
+            weights,
+            biases,
+        }
+    }
+
+    /// Forward pass returning all layer activations (post-nonlinearity).
+    fn forward_full(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        assert_eq!(x.len(), self.sizes[0]);
+        let mut acts = vec![x.to_vec()];
+        let last = self.weights.len() - 1;
+        for (l, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let prev = acts.last().unwrap();
+            let mut z: Vec<f64> = w
+                .iter()
+                .zip(b)
+                .map(|(row, bias)| {
+                    row.iter().zip(prev).map(|(wi, xi)| wi * xi).sum::<f64>() + bias
+                })
+                .collect();
+            if l != last {
+                for v in &mut z {
+                    *v = v.tanh();
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    pub fn predict(&self, x: &[f64]) -> Vec<f64> {
+        self.forward_full(x).pop().unwrap()
+    }
+
+    /// One SGD step on a single example; returns the example's MSE.
+    pub fn train_step(&mut self, x: &[f64], y: &[f64], lr: f64) -> f64 {
+        let acts = self.forward_full(x);
+        let out = acts.last().unwrap();
+        assert_eq!(y.len(), out.len());
+        // output delta (linear output, MSE): dL/dz = (out - y)
+        let mut delta: Vec<f64> = out.iter().zip(y).map(|(o, t)| o - t).collect();
+        let loss: f64 =
+            delta.iter().map(|d| d * d).sum::<f64>() / (2.0 * delta.len() as f64);
+
+        for l in (0..self.weights.len()).rev() {
+            let input = &acts[l];
+            // gradient step for this layer
+            let prev_delta: Vec<f64> = if l > 0 {
+                // backprop through weights then tanh'
+                (0..self.sizes[l])
+                    .map(|j| {
+                        let s: f64 = (0..self.sizes[l + 1])
+                            .map(|i| self.weights[l][i][j] * delta[i])
+                            .sum();
+                        let a = acts[l][j];
+                        s * (1.0 - a * a)
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            for i in 0..self.sizes[l + 1] {
+                for j in 0..self.sizes[l] {
+                    self.weights[l][i][j] -= lr * delta[i] * input[j];
+                }
+                self.biases[l][i] -= lr * delta[i];
+            }
+            delta = prev_delta;
+        }
+        loss
+    }
+
+    /// Epoch-based training over a dataset; returns final mean loss.
+    pub fn fit(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[Vec<f64>],
+        epochs: usize,
+        lr: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut last = f64::INFINITY;
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut total = 0.0;
+            for &i in &order {
+                total += self.train_step(&xs[i], &ys[i], lr);
+            }
+            last = total / xs.len() as f64;
+        }
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_linear_function() {
+        let mut rng = Rng::new(1);
+        let mut net = Mlp::new(&[2, 8, 1], &mut rng);
+        let xs: Vec<Vec<f64>> = (0..200)
+            .map(|_| vec![rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)])
+            .collect();
+        let ys: Vec<Vec<f64>> = xs.iter().map(|x| vec![0.5 * x[0] - 0.3 * x[1]]).collect();
+        let loss = net.fit(&xs, &ys, 200, 0.05, &mut rng);
+        assert!(loss < 1e-3, "loss={loss}");
+        let pred = net.predict(&[0.4, 0.2])[0];
+        assert!((pred - (0.5 * 0.4 - 0.3 * 0.2)).abs() < 0.05, "pred={pred}");
+    }
+
+    #[test]
+    fn fits_xor_like_nonlinearity() {
+        let mut rng = Rng::new(3);
+        let mut net = Mlp::new(&[2, 12, 1], &mut rng);
+        let xs = vec![
+            vec![0.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+        ];
+        let ys = vec![vec![0.0], vec![1.0], vec![1.0], vec![0.0]];
+        let loss = net.fit(&xs, &ys, 3_000, 0.1, &mut rng);
+        assert!(loss < 0.01, "loss={loss}");
+        assert!(net.predict(&[1.0, 0.0])[0] > 0.8);
+        assert!(net.predict(&[1.0, 1.0])[0] < 0.2);
+    }
+
+    #[test]
+    fn multi_output_regression() {
+        let mut rng = Rng::new(5);
+        let mut net = Mlp::new(&[1, 10, 2], &mut rng);
+        let xs: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 / 50.0 - 1.0]).collect();
+        let ys: Vec<Vec<f64>> = xs.iter().map(|x| vec![x[0].abs(), -x[0]]).collect();
+        let loss = net.fit(&xs, &ys, 800, 0.05, &mut rng);
+        assert!(loss < 5e-3, "loss={loss}");
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut rng = Rng::new(7);
+        let mut net = Mlp::new(&[3, 6, 1], &mut rng);
+        let xs: Vec<Vec<f64>> = (0..50)
+            .map(|_| (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect();
+        let ys: Vec<Vec<f64>> = xs.iter().map(|x| vec![x.iter().sum::<f64>()]).collect();
+        let first = net.fit(&xs, &ys, 1, 0.02, &mut rng);
+        let later = net.fit(&xs, &ys, 100, 0.02, &mut rng);
+        assert!(later < first, "{later} !< {first}");
+    }
+}

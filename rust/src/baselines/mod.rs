@@ -1,0 +1,16 @@
+//! The comparison models of §5: two static models (GO, SP), one
+//! heuristic (SC), two dynamic models (HARP, ANN+OT) and one
+//! mathematical direct-search model (NMT), all behind the
+//! [`api::Optimizer`] trait so the experiment drivers treat every model
+//! — including our ASM — uniformly.
+
+pub mod ann_ot;
+pub mod api;
+pub mod globus;
+pub mod harp;
+pub mod mlp;
+pub mod nelder_mead;
+pub mod single_chunk;
+pub mod static_ann;
+
+pub use api::{AsmOptimizer, NoOptimization, Optimizer, OptimizerKind};

@@ -1,0 +1,319 @@
+//! NMT — the Nelder–Mead direct-search tuner of Balaprakash et al.,
+//! ICPP'16 [25].
+//!
+//! "Nelder-Mead Tuner implements a direct search optimization which
+//! does not consider any historical analysis, rather tries to reach
+//! [the] optimal point using reflection and expansion operation" (§5).
+//! Each simplex evaluation is a real chunk transfer, so convergence
+//! burns wall-clock ("some cases it requires 16-20 epochs to converge
+//! which could lead to under-utilization", §6).
+//!
+//! Standard Nelder–Mead in continuous (cc, p, pp) space (α = 1, γ = 2,
+//! ρ = ½, σ = ½), rounded to the integer grid per evaluation, with an
+//! evaluation budget after which the best vertex streams.
+
+use crate::baselines::api::Optimizer;
+use crate::Params;
+
+type Point = [f64; 3];
+
+fn to_params(x: &Point, cap: u32) -> Params {
+    Params::new(
+        x[0].round().clamp(1.0, cap as f64) as u32,
+        x[1].round().clamp(1.0, cap as f64) as u32,
+        x[2].round().clamp(1.0, cap as f64) as u32,
+    )
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum NmState {
+    /// evaluating initial simplex vertex i
+    Init(usize),
+    /// waiting for the reflection point's value
+    Reflect,
+    /// waiting for the expansion point's value
+    Expand,
+    /// waiting for the contraction point's value
+    Contract,
+    /// shrinking: re-evaluating vertex i (1..=3)
+    Shrink(usize),
+    /// converged / budget exhausted: streaming at the best vertex
+    Done,
+}
+
+/// Nelder–Mead over live chunk transfers.
+#[derive(Debug, Clone)]
+pub struct NelderMead {
+    simplex: [Point; 4],
+    values: [f64; 4],
+    state: NmState,
+    /// the point whose measured value we are waiting for
+    pending: Point,
+    /// reflection value cache (needed when deciding expansion)
+    reflect_cache: (Point, f64),
+    evals: usize,
+    max_evals: usize,
+    cap: u32,
+}
+
+impl NelderMead {
+    pub fn new(start: Params, cap: u32, max_evals: usize) -> NelderMead {
+        let s0 = [start.cc as f64, start.p as f64, start.pp as f64];
+        // initial simplex: start + unit-ish steps per dimension
+        let mut simplex = [s0; 4];
+        for d in 0..3 {
+            simplex[d + 1][d] = (s0[d] * 2.0).clamp(1.0, cap as f64).max(s0[d] + 1.0);
+        }
+        NelderMead {
+            simplex,
+            values: [f64::NEG_INFINITY; 4],
+            state: NmState::Init(0),
+            pending: simplex[0],
+            reflect_cache: (s0, f64::NEG_INFINITY),
+            evals: 0,
+            max_evals,
+            cap,
+        }
+    }
+
+    fn order(&mut self) {
+        // sort vertices by value descending (we maximize)
+        let mut idx = [0usize, 1, 2, 3];
+        idx.sort_by(|&a, &b| self.values[b].partial_cmp(&self.values[a]).unwrap());
+        self.simplex = idx.map(|i| self.simplex[i]);
+        self.values = idx.map(|i| self.values[i]);
+    }
+
+    fn centroid_best3(&self) -> Point {
+        let mut c = [0.0; 3];
+        for v in &self.simplex[..3] {
+            for d in 0..3 {
+                c[d] += v[d] / 3.0;
+            }
+        }
+        c
+    }
+
+    fn propose_reflection(&mut self) -> Point {
+        let c = self.centroid_best3();
+        let w = self.simplex[3];
+        let mut r = [0.0; 3];
+        for d in 0..3 {
+            r[d] = (c[d] + (c[d] - w[d])).clamp(1.0, self.cap as f64);
+        }
+        r
+    }
+
+    fn best_params(&self) -> Params {
+        to_params(&self.simplex[0], self.cap)
+    }
+}
+
+impl Optimizer for NelderMead {
+    fn name(&self) -> &'static str {
+        "NMT"
+    }
+
+    fn next_params(&mut self, last_th: Option<f64>) -> Params {
+        // record the pending evaluation
+        if let Some(th) = last_th {
+            self.evals += 1;
+            match self.state {
+                NmState::Init(i) => {
+                    self.values[i] = th;
+                    if i + 1 < 4 {
+                        self.state = NmState::Init(i + 1);
+                        self.pending = self.simplex[i + 1];
+                    } else {
+                        self.order();
+                        self.state = NmState::Reflect;
+                        self.pending = self.propose_reflection();
+                    }
+                }
+                NmState::Reflect => {
+                    let r = self.pending;
+                    if th > self.values[0] {
+                        // try expansion
+                        self.reflect_cache = (r, th);
+                        let c = self.centroid_best3();
+                        let mut e = [0.0; 3];
+                        for d in 0..3 {
+                            e[d] = (c[d] + 2.0 * (r[d] - c[d])).clamp(1.0, self.cap as f64);
+                        }
+                        self.state = NmState::Expand;
+                        self.pending = e;
+                    } else if th > self.values[2] {
+                        // accept reflection
+                        self.simplex[3] = r;
+                        self.values[3] = th;
+                        self.order();
+                        self.state = NmState::Reflect;
+                        self.pending = self.propose_reflection();
+                    } else {
+                        // contract towards the centroid
+                        self.reflect_cache = (r, th);
+                        let c = self.centroid_best3();
+                        let w = self.simplex[3];
+                        let mut k = [0.0; 3];
+                        for d in 0..3 {
+                            k[d] = (c[d] + 0.5 * (w[d] - c[d])).clamp(1.0, self.cap as f64);
+                        }
+                        self.state = NmState::Contract;
+                        self.pending = k;
+                    }
+                }
+                NmState::Expand => {
+                    let (r, rv) = self.reflect_cache;
+                    if th > rv {
+                        self.simplex[3] = self.pending;
+                        self.values[3] = th;
+                    } else {
+                        self.simplex[3] = r;
+                        self.values[3] = rv;
+                    }
+                    self.order();
+                    self.state = NmState::Reflect;
+                    self.pending = self.propose_reflection();
+                }
+                NmState::Contract => {
+                    let (_, rv) = self.reflect_cache;
+                    if th > rv.max(self.values[3]) {
+                        self.simplex[3] = self.pending;
+                        self.values[3] = th;
+                        self.order();
+                        self.state = NmState::Reflect;
+                        self.pending = self.propose_reflection();
+                    } else {
+                        // shrink towards the best vertex
+                        for i in 1..4 {
+                            for d in 0..3 {
+                                self.simplex[i][d] = (self.simplex[0][d]
+                                    + 0.5 * (self.simplex[i][d] - self.simplex[0][d]))
+                                    .clamp(1.0, self.cap as f64);
+                            }
+                        }
+                        self.state = NmState::Shrink(1);
+                        self.pending = self.simplex[1];
+                    }
+                }
+                NmState::Shrink(i) => {
+                    self.values[i] = th;
+                    if i + 1 < 4 {
+                        self.state = NmState::Shrink(i + 1);
+                        self.pending = self.simplex[i + 1];
+                    } else {
+                        self.order();
+                        self.state = NmState::Reflect;
+                        self.pending = self.propose_reflection();
+                    }
+                }
+                NmState::Done => {}
+            }
+        }
+
+        // budget / degenerate-simplex stopping rule
+        if self.state != NmState::Done {
+            let spread = self.values[0] - self.values[3];
+            let converged = self.evals >= 4
+                && spread.is_finite()
+                && spread.abs() < 0.01 * self.values[0].abs().max(1.0);
+            if self.evals >= self.max_evals || converged {
+                self.state = NmState::Done;
+            }
+        }
+
+        match self.state {
+            NmState::Done => self.best_params(),
+            _ => to_params(&self.pending, self.cap),
+        }
+    }
+
+    fn predicted_th(&self) -> Option<f64> {
+        if self.values[0].is_finite() {
+            Some(self.values[0])
+        } else {
+            None
+        }
+    }
+
+    fn samples_used(&self) -> usize {
+        self.evals.min(self.max_evals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Concave test function peaking at (12, 6, 10).
+    fn peak(q: Params) -> f64 {
+        1_000.0
+            - 3.0 * (q.cc as f64 - 12.0).powi(2)
+            - 5.0 * (q.p as f64 - 6.0).powi(2)
+            - 1.0 * (q.pp as f64 - 10.0).powi(2)
+    }
+
+    fn run(mut nm: NelderMead, evals: usize) -> (Params, usize) {
+        let mut q = nm.next_params(None);
+        for _ in 0..evals {
+            q = nm.next_params(Some(peak(q)));
+        }
+        (q, nm.samples_used())
+    }
+
+    #[test]
+    fn climbs_towards_the_peak() {
+        let nm = NelderMead::new(Params::new(2, 2, 2), 32, 40);
+        let start_v = peak(Params::new(2, 2, 2));
+        let (q, _) = run(nm, 40);
+        assert!(
+            peak(q) > start_v + 100.0,
+            "no progress: started {start_v}, ended {} at {q}",
+            peak(q)
+        );
+    }
+
+    #[test]
+    fn stops_at_eval_budget() {
+        let nm = NelderMead::new(Params::new(2, 2, 2), 32, 10);
+        let mut nm2 = nm.clone();
+        let mut q = nm2.next_params(None);
+        for _ in 0..30 {
+            q = nm2.next_params(Some(peak(q)));
+        }
+        assert!(nm2.samples_used() <= 10);
+        // after the budget the params freeze
+        let frozen = nm2.next_params(Some(1.0));
+        assert_eq!(frozen, nm2.next_params(Some(1e9)));
+        let _ = q;
+    }
+
+    #[test]
+    fn params_always_in_domain() {
+        let mut nm = NelderMead::new(Params::new(31, 31, 31), 32, 30);
+        let mut q = nm.next_params(None);
+        for _ in 0..30 {
+            assert!((1..=32).contains(&q.cc), "{q}");
+            assert!((1..=32).contains(&q.p));
+            assert!((1..=32).contains(&q.pp));
+            q = nm.next_params(Some(peak(q)));
+        }
+    }
+
+    #[test]
+    fn converges_on_flat_function() {
+        // constant throughput: simplex spread hits the tolerance fast
+        let mut nm = NelderMead::new(Params::new(4, 4, 4), 32, 40);
+        let mut q = nm.next_params(None);
+        let mut used = 0;
+        for _ in 0..40 {
+            q = nm.next_params(Some(500.0));
+            used = nm.samples_used();
+            if matches!(nm.state, NmState::Done) {
+                break;
+            }
+        }
+        assert!(used <= 8, "flat function should converge quickly: {used}");
+        let _ = q;
+    }
+}

@@ -1,0 +1,89 @@
+//! SC — the Single-Chunk heuristic of Arslan et al. [23].
+//!
+//! Parameters follow closed-form rules over dataset characteristics and
+//! network metrics ("SC also makes parameter decision based on dataset
+//! characteristics and network matrices"), bounded by a user-supplied
+//! concurrency limit ("It asks the user to provide an upper limit for
+//! concurrency value. SC does not exceed that limit", §5):
+//!
+//! * parallelism covers the BDP with one file's worth of data per
+//!   stream: `p ≈ BDP / f_avg`;
+//! * pipelining hides one RTT of control traffic per file:
+//!   `pp ≈ BDP / f_avg` for small files;
+//! * concurrency grows with file count up to the user cap.
+
+use crate::baselines::api::Optimizer;
+use crate::sim::dataset::Dataset;
+use crate::sim::profile::NetProfile;
+use crate::Params;
+
+#[derive(Debug, Clone)]
+pub struct SingleChunk {
+    params: Params,
+}
+
+impl SingleChunk {
+    pub fn plan(profile: &NetProfile, dataset: &Dataset, user_cc_cap: u32) -> SingleChunk {
+        let bdp_mb = profile.bdp_mb().max(0.05);
+        let f = dataset.avg_file_mb;
+
+        let p = ((bdp_mb / f).ceil() as u32).clamp(1, profile.max_param.min(8));
+        let pp = ((bdp_mb / f).ceil() as u32).clamp(1, profile.max_param);
+        // one channel per ~64 files, capped by the user limit
+        let cc = ((dataset.n_files as f64 / 64.0).ceil() as u32)
+            .clamp(1, user_cc_cap.min(profile.max_param));
+        SingleChunk {
+            params: Params::new(cc, p, pp),
+        }
+    }
+}
+
+impl Optimizer for SingleChunk {
+    fn name(&self) -> &'static str {
+        "SC"
+    }
+
+    fn next_params(&mut self, _last_th: Option<f64>) -> Params {
+        self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_files_get_pipelining_not_parallelism() {
+        let p = NetProfile::xsede(); // BDP 50 MB
+        let sc = SingleChunk::plan(&p, &Dataset::new(50_000, 1.0), 16);
+        let q = sc.clone().next_params(None);
+        assert!(q.pp >= 16, "{q}");
+        assert!(q.p <= 8);
+        assert_eq!(q.cc, 16, "hits the user cap");
+    }
+
+    #[test]
+    fn large_files_get_parallelism() {
+        let p = NetProfile::xsede();
+        let sc = SingleChunk::plan(&p, &Dataset::new(16, 4_096.0), 16);
+        let q = sc.clone().next_params(None);
+        assert_eq!(q.p, 1, "one 4 GB file covers the BDP alone");
+        assert_eq!(q.pp, 1);
+        assert_eq!(q.cc, 1);
+    }
+
+    #[test]
+    fn respects_user_cc_cap() {
+        let p = NetProfile::xsede();
+        let sc = SingleChunk::plan(&p, &Dataset::new(100_000, 1.0), 4);
+        assert_eq!(sc.clone().next_params(None).cc, 4);
+    }
+
+    #[test]
+    fn short_rtt_path_needs_few_streams() {
+        let p = NetProfile::didclab(); // BDP 25 KB
+        let sc = SingleChunk::plan(&p, &Dataset::new(100, 100.0), 8);
+        let q = sc.clone().next_params(None);
+        assert_eq!(q.p, 1);
+    }
+}

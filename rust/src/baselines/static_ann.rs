@@ -1,0 +1,188 @@
+//! SP — the Static-ANN baseline of [22] (Nine et al., NDM'15).
+//!
+//! A small neural network is trained *offline* on the historical logs
+//! to map transfer context (RTT, bandwidth, file size, file count) to
+//! good protocol parameters; at transfer time the prediction is made
+//! once and never revisited (the "Static ANN (SP)" of §5).
+//!
+//! Training targets: for each context group in the corpus, the
+//! parameters of the empirically-best log entry (what the original
+//! paper's hysteresis mining distils to).
+
+use crate::baselines::api::Optimizer;
+use crate::baselines::mlp::Mlp;
+use crate::logs::schema::LogEntry;
+use crate::offline::features::{raw_features, FeatureScaler};
+use crate::util::rng::Rng;
+use crate::Params;
+use std::collections::BTreeMap;
+
+/// Trained static-ANN model (shared by every SP transfer).
+#[derive(Debug, Clone)]
+pub struct StaticAnnModel {
+    scaler: FeatureScaler,
+    net: Mlp,
+    max_param: u32,
+}
+
+/// Group key: coarse context bucket (network is implied by rtt/bw).
+fn group_key(e: &LogEntry) -> (u64, u64, u64) {
+    (
+        (e.rtt_s * 1e4) as u64,
+        e.bandwidth_mbps as u64,
+        e.avg_file_mb.log2().floor().max(0.0) as u64,
+    )
+}
+
+impl StaticAnnModel {
+    /// Train on a log corpus.
+    pub fn train(entries: &[LogEntry], max_param: u32, seed: u64) -> StaticAnnModel {
+        assert!(!entries.is_empty());
+        let refs: Vec<&LogEntry> = entries.iter().collect();
+        let scaler = FeatureScaler::fit(&refs);
+
+        // best observed params per context group
+        let mut best: BTreeMap<(u64, u64, u64), (&LogEntry, f64)> = BTreeMap::new();
+        for e in entries {
+            let k = group_key(e);
+            match best.get(&k) {
+                Some((_, th)) if *th >= e.throughput_mbps => {}
+                _ => {
+                    best.insert(k, (e, e.throughput_mbps));
+                }
+            }
+        }
+
+        let cap = max_param as f64;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for (e, _) in best.values() {
+            xs.push(scaler.apply(raw_features(e)).to_vec());
+            ys.push(vec![
+                e.params.cc as f64 / cap,
+                e.params.p as f64 / cap,
+                e.params.pp as f64 / cap,
+            ]);
+        }
+        let mut rng = Rng::new(seed ^ 0x5aa0);
+        let mut net = Mlp::new(&[4, 16, 8, 3], &mut rng);
+        net.fit(&xs, &ys, 300, 0.02, &mut rng);
+        StaticAnnModel {
+            scaler,
+            net,
+            max_param,
+        }
+    }
+
+    /// Predict parameters for a transfer context.
+    pub fn predict(
+        &self,
+        rtt_s: f64,
+        bandwidth_mbps: f64,
+        avg_file_mb: f64,
+        n_files: u64,
+    ) -> Params {
+        let f = self
+            .scaler
+            .transform_query(rtt_s, bandwidth_mbps, avg_file_mb, n_files);
+        let out = self.net.predict(&f);
+        let cap = self.max_param as f64;
+        let clamp = |v: f64| (v * cap).round().clamp(1.0, cap) as u32;
+        Params::new(clamp(out[0]), clamp(out[1]), clamp(out[2]))
+    }
+}
+
+/// Per-transfer SP optimizer: one static prediction.
+#[derive(Debug, Clone)]
+pub struct StaticAnn {
+    params: Params,
+}
+
+impl StaticAnn {
+    pub fn for_transfer(
+        model: &StaticAnnModel,
+        rtt_s: f64,
+        bandwidth_mbps: f64,
+        avg_file_mb: f64,
+        n_files: u64,
+    ) -> StaticAnn {
+        StaticAnn {
+            params: model.predict(rtt_s, bandwidth_mbps, avg_file_mb, n_files),
+        }
+    }
+}
+
+impl Optimizer for StaticAnn {
+    fn name(&self) -> &'static str {
+        "SP"
+    }
+
+    fn next_params(&mut self, _last_th: Option<f64>) -> Params {
+        self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generator::{generate_history, GeneratorConfig};
+    use crate::sim::profile::NetProfile;
+
+    fn corpus() -> &'static Vec<LogEntry> {
+        use std::sync::OnceLock;
+        static CORPUS: OnceLock<Vec<LogEntry>> = OnceLock::new();
+        CORPUS.get_or_init(|| {
+            let cfg = GeneratorConfig {
+                days: 10.0,
+                transfers_per_hour: 10.0,
+                seed: 5,
+            };
+            let mut logs = generate_history(&NetProfile::xsede(), &cfg);
+            logs.extend(generate_history(&NetProfile::didclab(), &cfg));
+            logs
+        })
+    }
+
+    #[test]
+    fn predictions_in_bounds() {
+        let model = StaticAnnModel::train(corpus(), 32, 1);
+        for (rtt, bw, f, n) in [
+            (0.040, 10_000.0, 1.0, 10_000u64),
+            (0.0002, 1_000.0, 2_048.0, 16),
+            (0.030, 1_000.0, 64.0, 200),
+        ] {
+            let q = model.predict(rtt, bw, f, n);
+            assert!((1..=32).contains(&q.cc), "{q}");
+            assert!((1..=32).contains(&q.p));
+            assert!((1..=32).contains(&q.pp));
+        }
+    }
+
+    #[test]
+    fn beats_default_params_in_expectation() {
+        // the ANN should recommend more streams than (1,1,1) for a
+        // long-RTT 10G path with many large files
+        let model = StaticAnnModel::train(corpus(), 32, 2);
+        let q = model.predict(0.040, 10_000.0, 1_024.0, 64);
+        assert!(q.total_streams() > 2, "{q}");
+    }
+
+    #[test]
+    fn optimizer_is_static() {
+        let model = StaticAnnModel::train(corpus(), 32, 3);
+        let mut sp = StaticAnn::for_transfer(&model, 0.04, 10_000.0, 100.0, 100);
+        let a = sp.next_params(None);
+        assert_eq!(a, sp.next_params(Some(1.0)));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let c: &Vec<LogEntry> = corpus();
+        let m1 = StaticAnnModel::train(c, 32, 9);
+        let m2 = StaticAnnModel::train(c, 32, 9);
+        assert_eq!(
+            m1.predict(0.04, 1e4, 10.0, 100),
+            m2.predict(0.04, 1e4, 10.0, 100)
+        );
+    }
+}

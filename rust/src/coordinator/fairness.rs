@@ -1,0 +1,160 @@
+//! Centralized vs distributed coordination (§3).
+//!
+//! The distributed mode — the default everywhere else in this crate —
+//! lets each user's ASM instance sense the network independently.  The
+//! centralized mode models the paper's alternative: "a central
+//! scheduler can distribute the parameters to contending transfers
+//! ... It has a global view of the network and contending transfers",
+//! applicable when one administrative domain owns both endpoints.
+//!
+//! The central scheduler splits the *stream budget* (the total
+//! cc × p the bottleneck profitably supports at the current load)
+//! across active jobs, avoiding both the oscillation and the mutual
+//! congestion that distributed sensing pays for.
+
+use crate::offline::pipeline::SurfaceSet;
+use crate::sim::multiuser::{UserCtx, UserPolicy};
+use crate::Params;
+
+/// Central scheduler with a global view of active jobs.
+#[derive(Debug, Clone)]
+pub struct CentralScheduler {
+    /// bucket-optimal parameters for the current (estimated) load
+    reference: Params,
+    n_users: usize,
+    max_param: u32,
+}
+
+impl CentralScheduler {
+    /// Build from the knowledge base's surface set: the reference
+    /// point is the median-load bucket's optimum (the same starting
+    /// point ASM samples from, but divided fairly up front).
+    pub fn new(set: &SurfaceSet, n_users: usize, max_param: u32) -> CentralScheduler {
+        let reference = set.buckets[set.median_bucket()].optimal_params;
+        CentralScheduler {
+            reference,
+            n_users: n_users.max(1),
+            max_param,
+        }
+    }
+
+    /// Parameters assigned to each of the n users: the reference
+    /// stream budget divided across users (concurrency split first —
+    /// processes are the expensive resource — with parallelism
+    /// reduced only when concurrency alone cannot absorb the split).
+    pub fn assignment(&self) -> Params {
+        let n = self.n_users as u32;
+        let total_budget = (self.reference.total_streams()).max(1);
+        let per_user = (total_budget + n - 1) / n;
+        // keep the reference's p:cc proportion under the reduced budget
+        let p = self.reference.p.min(per_user).max(1);
+        let cc = (per_user / p).max(1).min(self.max_param);
+        Params::new(cc, p, self.reference.pp)
+    }
+}
+
+/// A fixed-assignment user policy handed out by the central scheduler.
+#[derive(Debug, Clone)]
+pub struct CentralAssignment {
+    params: Params,
+}
+
+impl CentralAssignment {
+    pub fn new(params: Params) -> CentralAssignment {
+        CentralAssignment { params }
+    }
+}
+
+impl UserPolicy for CentralAssignment {
+    fn decide(&mut self, _ctx: &UserCtx) -> Params {
+        self.params
+    }
+
+    fn name(&self) -> &str {
+        "central"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::confidence::ConfidenceRegion;
+    use crate::offline::pipeline::LoadBucketSurfaces;
+    use crate::offline::spline::BicubicSurface;
+    use crate::offline::surface::{knot_lattice, FittedSurface, ThroughputSurface};
+
+    fn set_with_optimum(optimal: Params) -> SurfaceSet {
+        let xs = knot_lattice();
+        let values: Vec<Vec<f64>> =
+            xs.iter().map(|_| xs.iter().map(|_| 100.0).collect()).collect();
+        let surface = BicubicSurface::fit(&xs, &xs, &values);
+        let slice = ThroughputSurface {
+            pp: optimal.pp,
+            load_bucket: 0,
+            load_intensity: 0.5,
+            fitted: FittedSurface {
+                surface,
+                max_th: 100.0,
+                max_at: (optimal.p as f64, optimal.cc as f64),
+                grid_mean: 100.0,
+                grid_std: 1.0,
+            },
+            confidence: ConfidenceRegion { sigma: 5.0, z: 2.0 },
+            optimal_params: optimal,
+            optimal_th: 100.0,
+            n_obs: 10,
+            coverage: 1.0,
+        };
+        SurfaceSet {
+            cluster: 0,
+            class: crate::sim::dataset::FileSizeClass::Large,
+            buckets: vec![LoadBucketSurfaces {
+                bucket: 0,
+                load_intensity: 0.5,
+                true_intensity: 0.5,
+                slices: vec![slice],
+                optimal_params: optimal,
+                optimal_th: 100.0,
+            }],
+            sampling: vec![],
+        }
+    }
+
+    #[test]
+    fn splits_stream_budget_across_users() {
+        let set = set_with_optimum(Params::new(16, 4, 8)); // 64 streams
+        let sched = CentralScheduler::new(&set, 4, 32);
+        let q = sched.assignment();
+        assert_eq!(q.total_streams(), 16, "{q}"); // 64 / 4
+        assert_eq!(q.pp, 8);
+    }
+
+    #[test]
+    fn single_user_gets_everything() {
+        let set = set_with_optimum(Params::new(16, 4, 8));
+        let sched = CentralScheduler::new(&set, 1, 32);
+        assert_eq!(sched.assignment().total_streams(), 64);
+    }
+
+    #[test]
+    fn many_users_floor_at_one_stream() {
+        let set = set_with_optimum(Params::new(2, 2, 8)); // 4 streams
+        let sched = CentralScheduler::new(&set, 16, 32);
+        let q = sched.assignment();
+        assert_eq!(q.total_streams(), 1);
+    }
+
+    #[test]
+    fn aggregate_does_not_exceed_reference_much() {
+        for users in 1..=8usize {
+            let set = set_with_optimum(Params::new(12, 4, 8)); // 48
+            let sched = CentralScheduler::new(&set, users, 32);
+            let q = sched.assignment();
+            let total = q.total_streams() * users as u32;
+            assert!(
+                total <= 48 + users as u32 * 4,
+                "users={users}: {total} streams aggregate"
+            );
+        }
+    }
+}

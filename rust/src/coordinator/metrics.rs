@@ -1,0 +1,131 @@
+//! Transfer accounting and the paper's accuracy metric.
+//!
+//! Eq 21 defines `|T_achieved − T_predict| / T_predict × 100` — as
+//! written that is a relative *error*; the paper reports "93% accuracy"
+//! meaning `100 − error`, which is what [`accuracy_pct`] returns
+//! (clamped at 0 for wild misses).
+
+use crate::sim::engine::TransferOutcome;
+use crate::Params;
+
+/// Eq-21 style accuracy in percent.
+pub fn accuracy_pct(achieved: f64, predicted: f64) -> f64 {
+    if predicted <= 0.0 {
+        return 0.0;
+    }
+    (100.0 - (achieved - predicted).abs() / predicted * 100.0).max(0.0)
+}
+
+/// Report for one completed transfer.
+#[derive(Debug, Clone)]
+pub struct TransferReport {
+    pub model: String,
+    pub network: String,
+    pub total_mb: f64,
+    pub duration_s: f64,
+    pub avg_throughput_mbps: f64,
+    /// model-predicted throughput at its converged operating point
+    pub predicted_mbps: Option<f64>,
+    pub accuracy_pct: Option<f64>,
+    pub sample_transfers: usize,
+    pub param_changes: usize,
+    pub final_params: Params,
+    /// volume-weighted throughput of the *streaming* phase only (the
+    /// paper compares steady-state achievable throughput)
+    pub steady_throughput_mbps: f64,
+}
+
+impl TransferReport {
+    pub fn from_outcome(
+        model: &str,
+        network: &str,
+        outcome: &TransferOutcome,
+        predicted: Option<f64>,
+        sample_transfers: usize,
+    ) -> TransferReport {
+        // steady phase = samples after the last parameter change within
+        // the first quarter of chunks (the sampling head), or all if no
+        // changes happened
+        let head = sample_transfers.min(outcome.samples.len());
+        let steady: &[_] = &outcome.samples[head..];
+        let steady = if steady.is_empty() {
+            &outcome.samples[..]
+        } else {
+            steady
+        };
+        let (mb, secs) = steady.iter().fold((0.0, 0.0), |(mb, s), c| {
+            (mb + c.chunk_mb, s + c.chunk_mb * 8.0 / c.throughput_mbps)
+        });
+        let steady_th = if secs > 0.0 { mb * 8.0 / secs } else { 0.0 };
+        let avg = outcome.avg_throughput_mbps();
+        TransferReport {
+            model: model.to_string(),
+            network: network.to_string(),
+            total_mb: outcome.total_mb,
+            duration_s: outcome.duration_s,
+            avg_throughput_mbps: avg,
+            predicted_mbps: predicted,
+            accuracy_pct: predicted.map(|p| accuracy_pct(steady_th, p)),
+            sample_transfers,
+            param_changes: outcome.param_changes(),
+            final_params: outcome
+                .samples
+                .last()
+                .map(|c| c.params)
+                .unwrap_or(Params::DEFAULT),
+            steady_throughput_mbps: steady_th,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::ChunkSample;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy_pct(100.0, 100.0), 100.0);
+        assert!((accuracy_pct(93.0, 100.0) - 93.0).abs() < 1e-12);
+        assert!((accuracy_pct(107.0, 100.0) - 93.0).abs() < 1e-12);
+        assert_eq!(accuracy_pct(500.0, 100.0), 0.0); // clamped
+        assert_eq!(accuracy_pct(1.0, 0.0), 0.0);
+    }
+
+    fn outcome() -> TransferOutcome {
+        let mk = |t, th, mb, params| ChunkSample {
+            t_s: t,
+            params,
+            throughput_mbps: th,
+            chunk_mb: mb,
+            penalty_s: 0.0,
+        };
+        TransferOutcome {
+            total_mb: 3_000.0,
+            duration_s: 60.0,
+            samples: vec![
+                mk(10.0, 100.0, 500.0, Params::new(2, 2, 2)),
+                mk(30.0, 400.0, 500.0, Params::new(8, 4, 8)),
+                mk(50.0, 800.0, 1_000.0, Params::new(8, 4, 8)),
+                mk(60.0, 800.0, 1_000.0, Params::new(8, 4, 8)),
+            ],
+        }
+    }
+
+    #[test]
+    fn steady_phase_excludes_sampling_head() {
+        let r = TransferReport::from_outcome("ASM", "xsede", &outcome(), Some(800.0), 2);
+        // steady = last two chunks at 800
+        assert!((r.steady_throughput_mbps - 800.0).abs() < 1e-9);
+        assert!((r.accuracy_pct.unwrap() - 100.0).abs() < 1e-9);
+        assert_eq!(r.sample_transfers, 2);
+        assert_eq!(r.final_params, Params::new(8, 4, 8));
+    }
+
+    #[test]
+    fn avg_includes_everything() {
+        let r = TransferReport::from_outcome("GO", "xsede", &outcome(), None, 0);
+        assert!((r.avg_throughput_mbps - 3_000.0 * 8.0 / 60.0).abs() < 1e-9);
+        assert!(r.accuracy_pct.is_none());
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordination: the deployable transfer service.
+//!
+//! * [`scheduler`] — chunk sizing and sample-transfer budgeting;
+//! * [`state`] — the per-transfer state machine (queued → sampling →
+//!   streaming → retuning → done) with transition validation;
+//! * [`metrics`] — the Eq-21 accuracy metric and report aggregation;
+//! * [`fairness`] — the §3 centralized-scheduler variant (global view)
+//!   next to the default distributed mode;
+//! * [`orchestrator`] — the leader loop: request intake over std mpsc
+//!   channels, a worker pool driving transfers through the simulator,
+//!   and report collection (tokio is unavailable offline — DESIGN.md §4
+//!   documents the std-thread architecture).
+
+pub mod fairness;
+pub mod metrics;
+pub mod orchestrator;
+pub mod scheduler;
+pub mod state;
+
+pub use metrics::{accuracy_pct, TransferReport};
+pub use orchestrator::{Orchestrator, OrchestratorConfig, TransferRequest};
+pub use scheduler::ChunkPlan;
+pub use state::TransferState;

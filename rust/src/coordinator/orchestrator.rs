@@ -1,0 +1,329 @@
+//! The leader loop: accepts transfer requests, builds the right
+//! optimizer for each (ASM from the knowledge base, or any §5
+//! baseline), drives the chunked transfer through the simulator, and
+//! emits [`TransferReport`]s.  Batch mode fans requests out to a
+//! worker-thread pool over std mpsc channels.
+
+use crate::baselines::ann_ot::{AnnOt, AnnOtModel};
+use crate::baselines::api::{AsmOptimizer, NoOptimization, Optimizer, OptimizerKind};
+use crate::baselines::globus::Globus;
+use crate::baselines::harp::Harp;
+use crate::baselines::nelder_mead::NelderMead;
+use crate::baselines::single_chunk::SingleChunk;
+use crate::baselines::static_ann::{StaticAnn, StaticAnnModel};
+use crate::coordinator::metrics::TransferReport;
+use crate::coordinator::scheduler::{plan_chunks, SchedulerConfig};
+use crate::coordinator::state::TransferState;
+use crate::offline::pipeline::KnowledgeBase;
+use crate::online::controller::{DynamicTuner, TunerConfig};
+use crate::sim::dataset::Dataset;
+use crate::sim::engine::{ChunkSample, SimEnv, TransferOutcome};
+use crate::sim::profile::NetProfile;
+use std::sync::{mpsc, Arc, Mutex};
+
+/// One transfer job.
+#[derive(Debug, Clone)]
+pub struct TransferRequest {
+    pub id: u64,
+    pub profile: NetProfile,
+    pub dataset: Dataset,
+    pub model: OptimizerKind,
+    pub seed: u64,
+    /// diurnal phase offset (seconds): pins peak vs off-peak
+    pub phase_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct OrchestratorConfig {
+    pub workers: usize,
+    pub scheduler: SchedulerConfig,
+    pub tuner: TunerConfig,
+    /// chunks transferred at sample size before switching to stream
+    /// size (covers every model's probing phase)
+    pub sampling_chunks: usize,
+}
+
+impl Default for OrchestratorConfig {
+    fn default() -> Self {
+        OrchestratorConfig {
+            workers: 4,
+            scheduler: SchedulerConfig::default(),
+            tuner: TunerConfig::default(),
+            sampling_chunks: 6,
+        }
+    }
+}
+
+/// The transfer service.
+pub struct Orchestrator {
+    pub kb: Arc<KnowledgeBase>,
+    pub sp_model: Arc<StaticAnnModel>,
+    pub annot_model: Arc<AnnOtModel>,
+    pub cfg: OrchestratorConfig,
+}
+
+impl Orchestrator {
+    pub fn new(
+        kb: Arc<KnowledgeBase>,
+        sp_model: Arc<StaticAnnModel>,
+        annot_model: Arc<AnnOtModel>,
+        cfg: OrchestratorConfig,
+    ) -> Orchestrator {
+        Orchestrator {
+            kb,
+            sp_model,
+            annot_model,
+            cfg,
+        }
+    }
+
+    /// Build the per-request optimizer.
+    pub fn build_optimizer(&self, req: &TransferRequest) -> Box<dyn Optimizer> {
+        let p = &req.profile;
+        let d = &req.dataset;
+        match req.model {
+            OptimizerKind::Asm => {
+                let set = self
+                    .kb
+                    .query(p.rtt_s, p.bandwidth_mbps, d.avg_file_mb, d.n_files)
+                    .expect("knowledge base has surfaces")
+                    .clone();
+                Box::new(AsmOptimizer::new(DynamicTuner::new(
+                    set,
+                    self.cfg.tuner.clone(),
+                )))
+            }
+            OptimizerKind::Harp => Box::new(Harp::plan(p, d)),
+            OptimizerKind::AnnOt => Box::new(AnnOt::for_transfer(
+                &self.annot_model,
+                p.rtt_s,
+                p.bandwidth_mbps,
+                d.avg_file_mb,
+                d.n_files,
+                req.seed,
+            )),
+            OptimizerKind::Globus => Box::new(Globus::for_dataset(d)),
+            OptimizerKind::StaticAnn => Box::new(StaticAnn::for_transfer(
+                &self.sp_model,
+                p.rtt_s,
+                p.bandwidth_mbps,
+                d.avg_file_mb,
+                d.n_files,
+            )),
+            OptimizerKind::SingleChunk => Box::new(SingleChunk::plan(p, d, 16)),
+            OptimizerKind::NelderMead => {
+                Box::new(NelderMead::new(crate::Params::new(2, 2, 4), p.max_param, 20))
+            }
+            OptimizerKind::NoOpt => Box::new(NoOptimization),
+        }
+    }
+
+    /// Run one transfer to completion (synchronous).
+    pub fn execute(&self, req: &TransferRequest) -> TransferReport {
+        let mut env = SimEnv::new(req.profile.clone(), req.seed).with_phase(req.phase_s);
+        let mut optimizer = self.build_optimizer(req);
+        let mut state = TransferState::Queued;
+        state.transition(TransferState::Sampling);
+
+        let expected = req.profile.bandwidth_mbps / 4.0;
+        let plan = plan_chunks(&req.profile, &req.dataset, expected, &self.cfg.scheduler);
+
+        let total_mb = req.dataset.total_mb();
+        let start = env.now_s;
+        let mut remaining = total_mb;
+        let mut samples: Vec<ChunkSample> = Vec::new();
+        let mut last_th: Option<f64> = None;
+        let mut prev_params: Option<crate::Params> = None;
+        let mut idx = 0usize;
+
+        while remaining > 1e-9 {
+            if idx == self.cfg.sampling_chunks && state == TransferState::Sampling {
+                state.transition(TransferState::Streaming);
+            }
+            let chunk_mb = if idx < self.cfg.sampling_chunks {
+                plan.sample_chunk_mb.min(remaining)
+            } else {
+                plan.stream_chunk_mb.min(remaining)
+            };
+            let files = ((chunk_mb / req.dataset.avg_file_mb).ceil() as u64).max(1);
+            let chunk = Dataset::new(files, chunk_mb / files as f64);
+
+            let params = optimizer
+                .next_params(last_th)
+                .clamp(req.profile.max_param);
+            let (th, dur) = env.transfer_chunk(params, &chunk, prev_params);
+            samples.push(ChunkSample {
+                t_s: env.now_s - start,
+                params,
+                throughput_mbps: th,
+                chunk_mb,
+                penalty_s: prev_params
+                    .map(|q| env.model.param_change_penalty_s(q, params))
+                    .unwrap_or(0.0),
+            });
+            let _ = dur;
+            remaining -= chunk_mb;
+            last_th = Some(th);
+            prev_params = Some(params);
+            idx += 1;
+        }
+        if state == TransferState::Sampling {
+            state.transition(TransferState::Streaming);
+        }
+        state.transition(TransferState::Done);
+
+        let outcome = TransferOutcome {
+            total_mb,
+            duration_s: env.now_s - start,
+            samples,
+        };
+        TransferReport::from_outcome(
+            optimizer.name(),
+            req.profile.name,
+            &outcome,
+            optimizer.predicted_th(),
+            optimizer.samples_used().min(self.cfg.sampling_chunks),
+        )
+    }
+
+    /// Fan a request batch out to `cfg.workers` worker threads.
+    pub fn run_batch(&self, requests: Vec<TransferRequest>) -> Vec<TransferReport> {
+        let n = requests.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let (req_tx, req_rx) = mpsc::channel::<TransferRequest>();
+        let (rep_tx, rep_rx) = mpsc::channel::<(u64, TransferReport)>();
+        let req_rx = Arc::new(Mutex::new(req_rx));
+        for r in requests {
+            req_tx.send(r).unwrap();
+        }
+        drop(req_tx);
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.cfg.workers.max(1) {
+                let rx = Arc::clone(&req_rx);
+                let tx = rep_tx.clone();
+                scope.spawn(move || loop {
+                    let req = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match req {
+                        Ok(r) => {
+                            let report = self.execute(&r);
+                            if tx.send((r.id, report)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                });
+            }
+            drop(rep_tx);
+            let mut out: Vec<(u64, TransferReport)> = rep_rx.iter().collect();
+            out.sort_by_key(|(id, _)| *id);
+            out.into_iter().map(|(_, r)| r).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generator::{generate_history, GeneratorConfig};
+    use crate::offline::pipeline::OfflineConfig;
+    use std::sync::OnceLock;
+
+    fn orchestrator() -> &'static Orchestrator {
+        static ORCH: OnceLock<Orchestrator> = OnceLock::new();
+        ORCH.get_or_init(|| {
+            let cfg = GeneratorConfig {
+                days: 14.0,
+                transfers_per_hour: 10.0,
+                seed: 42,
+            };
+            let logs = generate_history(&NetProfile::xsede(), &cfg);
+            let kb = KnowledgeBase::build_native(logs.clone(), OfflineConfig::default());
+            let sp = StaticAnnModel::train(&logs, 32, 1);
+            let annot = AnnOtModel::train(&logs, 32, 1);
+            Orchestrator::new(
+                Arc::new(kb),
+                Arc::new(sp),
+                Arc::new(annot),
+                OrchestratorConfig::default(),
+            )
+        })
+    }
+
+    fn request(id: u64, model: OptimizerKind) -> TransferRequest {
+        TransferRequest {
+            id,
+            profile: NetProfile::xsede(),
+            dataset: Dataset::new(64, 512.0), // 32 GB
+            model,
+            seed: 7 + id,
+            phase_s: 7_200.0, // off-peak
+        }
+    }
+
+    #[test]
+    fn executes_all_models() {
+        let orch = orchestrator();
+        for kind in OptimizerKind::all() {
+            let r = orch.execute(&request(0, kind));
+            assert!(
+                r.avg_throughput_mbps > 0.0,
+                "{}: no throughput",
+                kind.label()
+            );
+            assert!((r.total_mb - 32_768.0).abs() < 1e-6);
+            assert!(r.duration_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn asm_beats_noopt_handily() {
+        let orch = orchestrator();
+        let asm = orch.execute(&request(1, OptimizerKind::Asm));
+        let noopt = orch.execute(&request(1, OptimizerKind::NoOpt));
+        assert!(
+            asm.avg_throughput_mbps > 2.0 * noopt.avg_throughput_mbps,
+            "ASM {} vs NoOpt {}",
+            asm.avg_throughput_mbps,
+            noopt.avg_throughput_mbps
+        );
+    }
+
+    #[test]
+    fn asm_uses_few_samples_and_predicts() {
+        let orch = orchestrator();
+        let r = orch.execute(&request(2, OptimizerKind::Asm));
+        assert!(r.sample_transfers <= 4, "{}", r.sample_transfers);
+        assert!(r.predicted_mbps.is_some());
+        assert!(r.accuracy_pct.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let orch = orchestrator();
+        let reqs: Vec<TransferRequest> = (0..6)
+            .map(|i| request(i, OptimizerKind::Asm))
+            .collect();
+        let seq: Vec<TransferReport> =
+            reqs.iter().map(|r| orch.execute(r)).collect();
+        let par = orch.run_batch(reqs);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            // identical seeds -> identical simulations, regardless of
+            // which worker ran them
+            assert_eq!(a.avg_throughput_mbps, b.avg_throughput_mbps);
+            assert_eq!(a.final_params, b.final_params);
+        }
+    }
+
+    #[test]
+    fn empty_batch() {
+        assert!(orchestrator().run_batch(vec![]).is_empty());
+    }
+}

@@ -1,0 +1,107 @@
+//! Chunk planning: how much data each sample transfer and each
+//! streaming chunk moves.
+//!
+//! Sample transfers use "a small predefined portion of the data"
+//! (§4): large enough to climb out of slow start (a multiple of the
+//! path BDP), small enough that the ⌈log₂ η⌉ bisection costs little.
+//! Streaming chunks are sized so the monitor gets a decision roughly
+//! every `target_decision_s` seconds at the expected throughput.
+
+use crate::sim::dataset::Dataset;
+use crate::sim::profile::NetProfile;
+
+/// Sizing decisions for one transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkPlan {
+    pub sample_chunk_mb: f64,
+    pub stream_chunk_mb: f64,
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// sample chunk = max(bdp_multiple × BDP, min_sample_mb)
+    pub bdp_multiple: f64,
+    pub min_sample_mb: f64,
+    /// cap the sample fraction of the whole dataset
+    pub max_sample_frac: f64,
+    /// desired seconds between streaming-phase decisions
+    pub target_decision_s: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            bdp_multiple: 32.0,
+            min_sample_mb: 64.0,
+            max_sample_frac: 0.05,
+            target_decision_s: 15.0,
+        }
+    }
+}
+
+/// Plan chunk sizes for a transfer.
+pub fn plan_chunks(
+    profile: &NetProfile,
+    dataset: &Dataset,
+    expected_th_mbps: f64,
+    cfg: &SchedulerConfig,
+) -> ChunkPlan {
+    let total = dataset.total_mb();
+    let sample = (cfg.bdp_multiple * profile.bdp_mb())
+        .max(cfg.min_sample_mb)
+        .min(total * cfg.max_sample_frac)
+        .max(dataset.avg_file_mb.min(total)) // at least one file
+        .min(total);
+    let stream = (expected_th_mbps.max(50.0) / 8.0 * cfg.target_decision_s)
+        .max(sample)
+        .min(total);
+    ChunkPlan {
+        sample_chunk_mb: sample,
+        stream_chunk_mb: stream,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_scales_with_bdp() {
+        let cfg = SchedulerConfig::default();
+        let big = Dataset::new(32_000, 16.0); // 512 GB of 16 MB files
+        let x = plan_chunks(&NetProfile::xsede(), &big, 5_000.0, &cfg);
+        let d = plan_chunks(&NetProfile::didclab(), &big, 500.0, &cfg);
+        // XSEDE BDP 50 MB -> 1.6 GB samples; DIDCLAB BDP tiny -> floor
+        assert!(x.sample_chunk_mb > d.sample_chunk_mb);
+        assert_eq!(d.sample_chunk_mb, 64.0);
+    }
+
+    #[test]
+    fn sample_capped_for_small_datasets() {
+        let cfg = SchedulerConfig::default();
+        let small = Dataset::new(100, 1.0); // 100 MB total
+        let p = plan_chunks(&NetProfile::xsede(), &small, 1_000.0, &cfg);
+        assert!(p.sample_chunk_mb <= 100.0);
+        assert!(p.stream_chunk_mb <= 100.0);
+    }
+
+    #[test]
+    fn stream_chunks_track_throughput() {
+        let cfg = SchedulerConfig::default();
+        let d = Dataset::new(10_000, 64.0);
+        let slow = plan_chunks(&NetProfile::xsede(), &d, 500.0, &cfg);
+        let fast = plan_chunks(&NetProfile::xsede(), &d, 8_000.0, &cfg);
+        assert!(fast.stream_chunk_mb > slow.stream_chunk_mb);
+        // ~15 s of data at 8 Gbps = 15 GB
+        assert!((fast.stream_chunk_mb - 15_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn stream_never_below_sample() {
+        let cfg = SchedulerConfig::default();
+        let d = Dataset::new(4_000, 64.0);
+        let p = plan_chunks(&NetProfile::xsede(), &d, 10.0, &cfg);
+        assert!(p.stream_chunk_mb >= p.sample_chunk_mb);
+    }
+}

@@ -1,0 +1,84 @@
+//! Per-transfer lifecycle state machine.
+//!
+//! Transitions are validated: a transfer cannot stream before sampling
+//! or resurrect after completion — the orchestrator relies on this to
+//! keep its bookkeeping honest under concurrent workers.
+
+/// Lifecycle of one transfer job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferState {
+    Queued,
+    /// ASM sample transfers in flight
+    Sampling,
+    /// bulk data moving at converged parameters
+    Streaming,
+    /// persistent deviation detected; re-selecting a surface
+    Retuning,
+    Done,
+    Failed,
+}
+
+impl TransferState {
+    /// Whether `self -> next` is a legal transition.
+    pub fn can_transition(self, next: TransferState) -> bool {
+        use TransferState::*;
+        matches!(
+            (self, next),
+            (Queued, Sampling)
+                | (Queued, Failed)
+                | (Sampling, Streaming)
+                | (Sampling, Failed)
+                | (Streaming, Retuning)
+                | (Streaming, Done)
+                | (Streaming, Failed)
+                | (Retuning, Streaming)
+                | (Retuning, Failed)
+        )
+    }
+
+    /// Apply a transition, panicking on an illegal one (programmer
+    /// error — the orchestrator must never attempt it).
+    pub fn transition(&mut self, next: TransferState) {
+        assert!(
+            self.can_transition(next),
+            "illegal transfer-state transition {self:?} -> {next:?}"
+        );
+        *self = next;
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, TransferState::Done | TransferState::Failed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use TransferState::*;
+
+    #[test]
+    fn happy_path() {
+        let mut s = Queued;
+        s.transition(Sampling);
+        s.transition(Streaming);
+        s.transition(Retuning);
+        s.transition(Streaming);
+        s.transition(Done);
+        assert!(s.is_terminal());
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        assert!(!Queued.can_transition(Streaming));
+        assert!(!Done.can_transition(Sampling));
+        assert!(!Sampling.can_transition(Retuning));
+        assert!(!Failed.can_transition(Queued));
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal transfer-state transition")]
+    fn transition_panics_on_illegal() {
+        let mut s = Queued;
+        s.transition(Done);
+    }
+}

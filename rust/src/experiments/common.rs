@@ -1,0 +1,135 @@
+//! Shared experiment context: one synthetic six-week log corpus, one
+//! knowledge base, one trained model per ANN baseline — built once per
+//! process (the benches all reuse it) with every seed fixed so runs
+//! reproduce bit-for-bit.
+
+use crate::baselines::ann_ot::AnnOtModel;
+use crate::baselines::static_ann::StaticAnnModel;
+use crate::coordinator::orchestrator::{Orchestrator, OrchestratorConfig, TransferRequest};
+use crate::baselines::api::OptimizerKind;
+use crate::logs::generator::{generate_history, GeneratorConfig};
+use crate::logs::schema::LogEntry;
+use crate::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use crate::sim::dataset::{Dataset, FileSizeClass};
+use crate::sim::profile::NetProfile;
+use crate::util::rng::Rng;
+use std::sync::{Arc, OnceLock};
+
+/// Seconds of diurnal phase for peak (14:00) and off-peak (03:00).
+pub const PEAK_PHASE_S: f64 = 14.0 * 3600.0;
+pub const OFFPEAK_PHASE_S: f64 = 3.0 * 3600.0;
+
+/// History length (days).  The paper used six weeks; 14 days gives the
+/// same surface coverage from this generator at a single-core-friendly
+/// build cost (`TWOPHASE_DAYS` overrides).
+pub fn history_days() -> f64 {
+    std::env::var("TWOPHASE_DAYS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(14.0)
+}
+
+/// Shared context for all experiments.
+pub struct ExperimentContext {
+    pub logs: Vec<LogEntry>,
+    pub kb: Arc<KnowledgeBase>,
+    pub sp_model: Arc<StaticAnnModel>,
+    pub annot_model: Arc<AnnOtModel>,
+    pub orchestrator: Orchestrator,
+}
+
+impl ExperimentContext {
+    fn build() -> ExperimentContext {
+        let days = history_days();
+        let mut logs = Vec::new();
+        for profile in NetProfile::all() {
+            logs.extend(generate_history(
+                &profile,
+                &GeneratorConfig {
+                    days,
+                    transfers_per_hour: 8.0,
+                    seed: 0xB16_DA7A,
+                },
+            ));
+        }
+        let kb = Arc::new(KnowledgeBase::build_native(
+            logs.clone(),
+            OfflineConfig::default(),
+        ));
+        let sp_model = Arc::new(StaticAnnModel::train(&logs, 32, 0xE1));
+        let annot_model = Arc::new(AnnOtModel::train(&logs, 32, 0xE2));
+        let orchestrator = Orchestrator::new(
+            Arc::clone(&kb),
+            Arc::clone(&sp_model),
+            Arc::clone(&annot_model),
+            OrchestratorConfig::default(),
+        );
+        ExperimentContext {
+            logs,
+            kb,
+            sp_model,
+            annot_model,
+            orchestrator,
+        }
+    }
+}
+
+/// The process-wide context (built on first use).
+pub fn ctx() -> &'static ExperimentContext {
+    static CTX: OnceLock<ExperimentContext> = OnceLock::new();
+    CTX.get_or_init(ExperimentContext::build)
+}
+
+/// Repetitions per cell (`TWOPHASE_REPS` overrides; default 3).
+pub fn reps() -> usize {
+    std::env::var("TWOPHASE_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}
+
+/// A reproducible dataset for (class, repetition).
+pub fn dataset_for(class: FileSizeClass, rep: usize) -> Dataset {
+    let mut rng = Rng::new(0xDA7A ^ (rep as u64) << 8 ^ class.name().len() as u64);
+    Dataset::sample(class, &mut rng)
+}
+
+/// Build a transfer request for one experiment cell.
+pub fn request(
+    id: u64,
+    profile: &NetProfile,
+    class: FileSizeClass,
+    model: OptimizerKind,
+    peak: bool,
+    rep: usize,
+) -> TransferRequest {
+    TransferRequest {
+        id,
+        profile: profile.clone(),
+        dataset: dataset_for(class, rep),
+        model,
+        seed: 0x5EED ^ id,
+        phase_s: if peak { PEAK_PHASE_S } else { OFFPEAK_PHASE_S },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_for_is_reproducible_and_classed() {
+        for class in FileSizeClass::all() {
+            let a = dataset_for(class, 1);
+            let b = dataset_for(class, 1);
+            assert_eq!(a, b);
+            assert_eq!(a.class(), class);
+            assert_ne!(a, dataset_for(class, 2));
+        }
+    }
+
+    #[test]
+    fn phases() {
+        assert!(PEAK_PHASE_S > OFFPEAK_PHASE_S);
+    }
+}

@@ -1,0 +1,95 @@
+//! Figure 1: piecewise cubic interpolation surface construction —
+//! build one cluster's surfaces from the shared corpus and report
+//! their structure (knots, patches, maxima, confidence width), plus a
+//! coarse ASCII rendering of the lightest-load surface.
+
+use crate::experiments::common::ctx;
+use crate::sim::profile::NetProfile;
+use crate::util::table::Table;
+
+pub struct Fig1Result {
+    pub n_surfaces: usize,
+    pub table: Table,
+}
+
+pub fn run() -> Fig1Result {
+    let c = ctx();
+    let p = NetProfile::xsede();
+    let set = c
+        .kb
+        .query(p.rtt_s, p.bandwidth_mbps, 512.0, 64)
+        .expect("kb built");
+
+    let mut t = Table::new(&[
+        "bucket",
+        "load",
+        "pp",
+        "patches",
+        "coverage",
+        "opt-params",
+        "opt-th(Mbps)",
+        "sigma",
+    ]);
+    let mut n = 0;
+    for b in &set.buckets {
+        for s in &b.slices {
+            n += 1;
+            t.row(&[
+                b.bucket.to_string(),
+                format!("{:.2}", b.load_intensity),
+                s.pp.to_string(),
+                format!(
+                    "{}x{}",
+                    s.fitted.surface.coeffs.len(),
+                    s.fitted.surface.coeffs[0].len()
+                ),
+                format!("{:.0}%", s.coverage * 100.0),
+                s.optimal_params.to_string(),
+                format!("{:.0}", s.optimal_th),
+                format!("{:.1}", s.confidence.sigma),
+            ]);
+        }
+    }
+    println!("Figure 1 — constructed piecewise bicubic surfaces (XSEDE cluster)");
+    t.print();
+
+    // ASCII heat sketch of the lightest bucket's best slice
+    if let Some(b) = set.buckets.first() {
+        if let Some(s) = b.slices.iter().max_by(|a, c| {
+            a.optimal_th.partial_cmp(&c.optimal_th).unwrap()
+        }) {
+            let dense = s.fitted.surface.dense_eval(2);
+            let max = dense
+                .iter()
+                .flatten()
+                .fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+            println!(
+                "surface sketch (pp={}, rows = p, cols = cc, #=near max):",
+                s.pp
+            );
+            for row in dense.iter().step_by(2) {
+                let line: String = row
+                    .iter()
+                    .step_by(2)
+                    .map(|&v| {
+                        let r = v / max;
+                        if r > 0.9 {
+                            '#'
+                        } else if r > 0.7 {
+                            '+'
+                        } else if r > 0.4 {
+                            '.'
+                        } else {
+                            ' '
+                        }
+                    })
+                    .collect();
+                println!("  |{line}|");
+            }
+        }
+    }
+    Fig1Result {
+        n_surfaces: n,
+        table: t,
+    }
+}

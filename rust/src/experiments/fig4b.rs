@@ -1,0 +1,108 @@
+//! Figure 4(b): accuracy of surface-construction methods — quadratic
+//! regression vs cubic regression vs piecewise bicubic spline, on a
+//! 70/30 train/test split of same-condition observations (the paper
+//! finds the spline wins at ~85%).
+
+use crate::logs::generator::PARAM_GRID;
+use crate::offline::regression::{Degree, PolySurface};
+use crate::offline::surface::{NativeSurfaceBackend, SurfaceBackend, SurfaceGrid};
+use crate::sim::dataset::Dataset;
+use crate::sim::profile::NetProfile;
+use crate::sim::traffic::TrafficProcess;
+use crate::sim::transfer::ThroughputModel;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::Table;
+use crate::Params;
+
+pub struct Fig4bResult {
+    pub quadratic_acc: f64,
+    pub cubic_acc: f64,
+    pub spline_acc: f64,
+}
+
+/// Mean Eq-21 accuracy over a test set of (params, th).
+fn accuracy<F: Fn(Params) -> f64>(test: &[(Params, f64)], predict: F) -> f64 {
+    let accs: Vec<f64> = test
+        .iter()
+        .map(|(q, th)| {
+            let pred = predict(*q);
+            (100.0 - (pred - th).abs() / th.max(1.0) * 100.0).max(0.0)
+        })
+        .collect();
+    stats::mean(&accs)
+}
+
+pub fn run() -> Fig4bResult {
+    // observations from one condition (fixed load), replicated with
+    // noise over the full parameter grid — the per-(cluster, bucket,
+    // pp) slice setting the offline phase fits in
+    let p = NetProfile::didclab_xsede();
+    let model = ThroughputModel::new(p.clone());
+    let load = TrafficProcess::fixed(&p, 0.3);
+    let dataset = Dataset::new(256, 128.0);
+    let mut rng = Rng::new(0x46b);
+
+    let mut obs: Vec<(Params, f64)> = Vec::new();
+    for &pv in &PARAM_GRID {
+        for &cc in &PARAM_GRID {
+            for _ in 0..4 {
+                let q = Params::new(cc, pv, 8);
+                obs.push((q, model.sample(q, &dataset, &load, &mut rng)));
+            }
+        }
+    }
+    rng.shuffle(&mut obs);
+    let split = obs.len() * 7 / 10;
+    let (train, test) = obs.split_at(split);
+
+    // regression baselines
+    let quad = PolySurface::fit(Degree::Quadratic, train).expect("quadratic fit");
+    let cubic = PolySurface::fit(Degree::Cubic, train).expect("cubic fit");
+
+    // piecewise bicubic spline via the shared backend
+    let grid = SurfaceGrid::from_observations(train);
+    let fit = NativeSurfaceBackend
+        .fit_batch(&grid.xs, &grid.ys, &[grid.values.clone()], 8)
+        .remove(0);
+
+    let quadratic_acc = accuracy(test, |q| quad.predict(q));
+    let cubic_acc = accuracy(test, |q| cubic.predict(q));
+    let spline_acc = accuracy(test, |q| fit.surface.eval(q.p as f64, q.cc as f64));
+
+    let mut t = Table::new(&["model", "test accuracy"]);
+    t.row(&["quadratic regression".into(), format!("{quadratic_acc:.1}%")]);
+    t.row(&["cubic regression".into(), format!("{cubic_acc:.1}%")]);
+    t.row(&["piecewise cubic spline".into(), format!("{spline_acc:.1}%")]);
+    println!("Figure 4(b) — surface construction accuracy (70/30 split)");
+    t.print();
+    println!("  paper: spline ≈ 85%, above both regressions");
+
+    Fig4bResult {
+        quadratic_acc,
+        cubic_acc,
+        spline_acc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn spline_beats_both_regressions() {
+        let r = super::run();
+        assert!(
+            r.spline_acc > r.quadratic_acc,
+            "spline {} vs quadratic {}",
+            r.spline_acc,
+            r.quadratic_acc
+        );
+        assert!(
+            r.spline_acc > r.cubic_acc,
+            "spline {} vs cubic {}",
+            r.spline_acc,
+            r.cubic_acc
+        );
+        // paper reports ~85%; we require the same ballpark
+        assert!(r.spline_acc > 80.0, "spline accuracy {}", r.spline_acc);
+    }
+}

@@ -1,0 +1,152 @@
+//! Figure 5(a–i): achievable throughput of all models across three
+//! networks × three dataset classes × peak/off-peak hours.
+
+use crate::baselines::api::OptimizerKind;
+use crate::experiments::common::{ctx, reps, request};
+use crate::sim::dataset::FileSizeClass;
+use crate::sim::profile::NetProfile;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// One cell of the Fig 5 matrix.
+#[derive(Debug, Clone)]
+pub struct Fig5Cell {
+    pub network: &'static str,
+    pub class: FileSizeClass,
+    pub peak: bool,
+    pub model: OptimizerKind,
+    pub mean_throughput_mbps: f64,
+}
+
+pub struct Fig5Result {
+    pub cells: Vec<Fig5Cell>,
+}
+
+impl Fig5Result {
+    pub fn cell(
+        &self,
+        network: &str,
+        class: FileSizeClass,
+        peak: bool,
+        model: OptimizerKind,
+    ) -> Option<&Fig5Cell> {
+        self.cells.iter().find(|c| {
+            c.network == network && c.class == class && c.peak == peak && c.model == model
+        })
+    }
+
+    /// ASM / HARP ratio for one (network, class, peak) panel.
+    pub fn asm_vs_harp(&self, network: &str, class: FileSizeClass, peak: bool) -> f64 {
+        let asm = self
+            .cell(network, class, peak, OptimizerKind::Asm)
+            .map(|c| c.mean_throughput_mbps)
+            .unwrap_or(0.0);
+        let harp = self
+            .cell(network, class, peak, OptimizerKind::Harp)
+            .map(|c| c.mean_throughput_mbps)
+            .unwrap_or(1.0);
+        asm / harp.max(1e-9)
+    }
+}
+
+/// Models evaluated in Fig 5 (the paper's seven, in its order).
+pub fn fig5_models() -> [OptimizerKind; 7] {
+    [
+        OptimizerKind::Asm,
+        OptimizerKind::Harp,
+        OptimizerKind::AnnOt,
+        OptimizerKind::NelderMead,
+        OptimizerKind::SingleChunk,
+        OptimizerKind::StaticAnn,
+        OptimizerKind::Globus,
+    ]
+}
+
+pub fn networks() -> [NetProfile; 3] {
+    [
+        NetProfile::xsede(),
+        NetProfile::didclab(),
+        NetProfile::didclab_xsede(),
+    ]
+}
+
+pub fn run() -> Fig5Result {
+    let c = ctx();
+    let r = reps();
+    let mut cells = Vec::new();
+    let mut id = 0u64;
+
+    for profile in networks() {
+        for class in FileSizeClass::all() {
+            for peak in [false, true] {
+                for model in fig5_models() {
+                    let mut ths = Vec::with_capacity(r);
+                    for rep in 0..r {
+                        id += 1;
+                        let req = request(id, &profile, class, model, peak, rep);
+                        let report = c.orchestrator.execute(&req);
+                        // the paper reports end-to-end achieved
+                        // throughput: total bytes / total wall time,
+                        // sampling and re-tuning overhead included
+                        ths.push(report.avg_throughput_mbps);
+                    }
+                    cells.push(Fig5Cell {
+                        network: profile.name,
+                        class,
+                        peak,
+                        model,
+                        mean_throughput_mbps: stats::mean(&ths),
+                    });
+                }
+            }
+        }
+    }
+
+    // print one paper-style panel table per network
+    for profile in networks() {
+        let mut t = Table::new(&[
+            "dataset", "hours", "ASM", "HARP", "ANN+OT", "NMT", "SC", "SP", "GO",
+        ]);
+        for class in FileSizeClass::all() {
+            for peak in [false, true] {
+                let mut row = vec![
+                    class.name().to_string(),
+                    if peak { "peak" } else { "off-peak" }.to_string(),
+                ];
+                for model in fig5_models() {
+                    let v = cells
+                        .iter()
+                        .find(|cl| {
+                            cl.network == profile.name
+                                && cl.class == class
+                                && cl.peak == peak
+                                && cl.model == model
+                        })
+                        .map(|cl| cl.mean_throughput_mbps)
+                        .unwrap_or(0.0);
+                    row.push(format!("{v:.0}"));
+                }
+                t.row(&row);
+            }
+        }
+        println!(
+            "Figure 5 — mean steady throughput (Mbps), network = {}",
+            profile.name
+        );
+        t.print();
+    }
+
+    let res = Fig5Result { cells };
+    // headline ratios
+    for profile in networks() {
+        for class in FileSizeClass::all() {
+            let ratio = res.asm_vs_harp(profile.name, class, false);
+            println!(
+                "  {} / {}: ASM vs HARP (off-peak) = {ratio:.2}x",
+                profile.name,
+                class.name()
+            );
+        }
+    }
+    res
+}

@@ -1,0 +1,134 @@
+//! Figure 6: model accuracy vs offline-analysis staleness — how often
+//! must the offline phase re-run?
+//!
+//! The paper measured 92% accuracy with daily analysis, degrading to
+//! ~87% at ten-day staleness.  Staleness only matters if the network
+//! *drifts*, so the experiment generates a history on a slowly
+//! drifting path (background load grows a few percent per day — usage
+//! growth), builds one knowledge base per staleness d from logs that
+//! end d days before the evaluation day, and measures the ASM's Eq-21
+//! accuracy on fresh transfers.
+
+use crate::baselines::api::{AsmOptimizer, Optimizer};
+use crate::coordinator::metrics::accuracy_pct;
+use crate::logs::generator::{generate_history, GeneratorConfig};
+use crate::logs::schema::LogEntry;
+use crate::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use crate::online::controller::DynamicTuner;
+use crate::sim::dataset::Dataset;
+use crate::sim::engine::SimEnv;
+use crate::sim::profile::NetProfile;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// Daily multiplicative growth of background load on the drifting path.
+const DRIFT_PER_DAY: f64 = 0.04;
+/// Evaluation happens on this day; KBs are built from logs ending at
+/// `EVAL_DAY - d`.
+const EVAL_DAY: f64 = 20.0;
+
+/// The drifted profile at a given day.
+pub fn profile_at_day(day: f64) -> NetProfile {
+    let mut p = NetProfile::xsede();
+    let g = 1.0 + DRIFT_PER_DAY * day;
+    p.bg_streams_peak *= g;
+    p.bg_streams_offpeak *= g;
+    p
+}
+
+/// Drifting history: day-long windows generated on the day's profile.
+fn drifting_history(days: f64, seed: u64) -> Vec<LogEntry> {
+    let mut out = Vec::new();
+    let mut day = 0.0;
+    while day < days {
+        let p = profile_at_day(day);
+        let mut logs = generate_history(
+            &p,
+            &GeneratorConfig {
+                days: 1.0,
+                transfers_per_hour: 24.0,
+                seed: seed ^ (day as u64),
+            },
+        );
+        for e in &mut logs {
+            e.timestamp_s += day * 86_400.0;
+        }
+        out.extend(logs);
+        day += 1.0;
+    }
+    out
+}
+
+pub struct Fig6Result {
+    /// (staleness days, mean accuracy %)
+    pub points: Vec<(usize, f64)>,
+}
+
+pub fn run() -> Fig6Result {
+    let history = drifting_history(EVAL_DAY, 0x46c);
+    let eval_profile = profile_at_day(EVAL_DAY);
+    let dataset = Dataset::new(128, 256.0);
+
+    let mut points = Vec::new();
+    for d in [1usize, 2, 4, 6, 8, 10] {
+        // logs available to a KB refreshed d days ago; the periodic
+        // analysis consumes the most recent ten days of logs (the
+        // additive window), so staleness shifts the window back by d
+        let cutoff = (EVAL_DAY - d as f64) * 86_400.0;
+        let window_start = cutoff - 10.0 * 86_400.0;
+        let visible: Vec<LogEntry> = history
+            .iter()
+            .filter(|e| e.timestamp_s >= window_start && e.timestamp_s < cutoff)
+            .cloned()
+            .collect();
+        let kb = KnowledgeBase::build_native(visible, OfflineConfig::default());
+
+        // fresh transfers on the drifted network, per-seed accuracy
+        let mut accs = Vec::new();
+        for seed in 0..10u64 {
+            let set = kb
+                .query(
+                    eval_profile.rtt_s,
+                    eval_profile.bandwidth_mbps,
+                    dataset.avg_file_mb,
+                    dataset.n_files,
+                )
+                .expect("kb has surfaces")
+                .clone();
+            let mut opt = AsmOptimizer::new(DynamicTuner::with_defaults(set));
+            let mut env =
+                SimEnv::new(eval_profile.clone(), 0x5EED ^ seed).with_phase(10.0 * 3600.0);
+            let mut last = None;
+            let mut prev = None;
+            // sampling + a few streaming chunks to converge
+            let mut params = opt.next_params(None);
+            for _ in 0..8 {
+                let chunk = dataset.sample_chunk(0.02);
+                let (th, _) = env.transfer_chunk(params, &chunk, prev);
+                last = Some(th);
+                prev = Some(params);
+                params = opt.next_params(last);
+            }
+            // penalty-free steady measurement at the converged point,
+            // averaged over several samples to beat measurement noise
+            let load = env.load_now();
+            let achieved = (0..10)
+                .map(|_| env.model.sample(params, &dataset, &load, &mut env.rng))
+                .sum::<f64>()
+                / 10.0;
+            let predicted = opt.predicted_th().unwrap_or(achieved);
+            accs.push(accuracy_pct(achieved, predicted));
+        }
+        points.push((d, stats::mean(&accs)));
+    }
+
+    let mut t = Table::new(&["offline period (days)", "accuracy"]);
+    for (d, a) in &points {
+        t.row(&[d.to_string(), format!("{a:.1}%")]);
+    }
+    println!("Figure 6 — accuracy vs offline analysis staleness (drifting path)");
+    t.print();
+    println!("  paper: 92% daily -> ~87% at 10 days");
+
+    Fig6Result { points }
+}

@@ -1,0 +1,141 @@
+//! Figures 2/9/10 + §5.4: the multi-user fairness experiment on the
+//! Chameleon profile — four users simultaneously running the same
+//! optimization technique on one bottleneck.
+//!
+//! Paper headlines to reproduce in shape: ASM ≈ 1.7× HARP, ≈ 3.4× GO,
+//! ≈ 5× No-Optimization in aggregate; ASM's per-user σ roughly half of
+//! HARP's; GO/NoOpt fair but slow.
+
+use crate::baselines::api::{OptimizerKind, PolicyAdapter};
+use crate::baselines::globus::Globus;
+use crate::baselines::harp::Harp;
+use crate::experiments::common::ctx;
+use crate::online::controller::DynamicTuner;
+use crate::sim::dataset::Dataset;
+use crate::sim::multiuser::{MultiUserSim, UserPolicy};
+use crate::sim::profile::NetProfile;
+use crate::util::stats;
+use crate::util::table::Table;
+use crate::Params;
+
+pub struct Fig9Row {
+    pub model: OptimizerKind,
+    pub per_user_mbps: Vec<f64>,
+    pub aggregate_mbps: f64,
+    pub stddev_mbps: f64,
+    pub jain: f64,
+}
+
+pub struct Fig9Result {
+    pub rows: Vec<Fig9Row>,
+}
+
+impl Fig9Result {
+    pub fn aggregate(&self, model: OptimizerKind) -> f64 {
+        self.rows
+            .iter()
+            .find(|r| r.model == model)
+            .map(|r| r.aggregate_mbps)
+            .unwrap_or(0.0)
+    }
+
+    pub fn stddev(&self, model: OptimizerKind) -> f64 {
+        self.rows
+            .iter()
+            .find(|r| r.model == model)
+            .map(|r| r.stddev_mbps)
+            .unwrap_or(0.0)
+    }
+}
+
+const USERS: usize = 4;
+const DURATION_S: f64 = 600.0;
+
+fn policies_for(model: OptimizerKind, dataset: &Dataset) -> Vec<Box<dyn UserPolicy>> {
+    let c = ctx();
+    let profile = NetProfile::chameleon();
+    (0..USERS)
+        .map(|_u| -> Box<dyn UserPolicy> {
+            match model {
+                OptimizerKind::Asm => {
+                    let set = c
+                        .kb
+                        .query(
+                            profile.rtt_s,
+                            profile.bandwidth_mbps,
+                            dataset.avg_file_mb,
+                            dataset.n_files,
+                        )
+                        .expect("kb has surfaces")
+                        .clone();
+                    Box::new(DynamicTuner::with_defaults(set))
+                }
+                OptimizerKind::Harp => {
+                    Box::new(PolicyAdapter(Harp::plan(&profile, dataset)))
+                }
+                OptimizerKind::Globus => {
+                    Box::new(PolicyAdapter(Globus::for_dataset(dataset)))
+                }
+                OptimizerKind::NoOpt => Box::new(move |_: &_| Params::DEFAULT),
+                other => panic!("fig9 does not evaluate {other:?}"),
+            }
+        })
+        .collect()
+}
+
+pub fn run() -> Fig9Result {
+    let dataset = Dataset::new(512, 256.0);
+    let models = [
+        OptimizerKind::Asm,
+        OptimizerKind::Harp,
+        OptimizerKind::Globus,
+        OptimizerKind::NoOpt,
+    ];
+
+    let mut rows = Vec::new();
+    for model in models {
+        let mut sim = MultiUserSim::new(NetProfile::chameleon(), 0x519);
+        let mut pols = policies_for(model, &dataset);
+        let ds = vec![dataset.clone(); USERS];
+        let out = sim.run(&mut pols, &ds, DURATION_S);
+        let per_user: Vec<f64> = out.iter().map(|u| u.mean_throughput_mbps).collect();
+        rows.push(Fig9Row {
+            model,
+            aggregate_mbps: per_user.iter().sum(),
+            stddev_mbps: stats::std_pop(&per_user),
+            jain: stats::jain_index(&per_user),
+            per_user_mbps: per_user,
+        });
+    }
+
+    let mut t = Table::new(&[
+        "model", "user1", "user2", "user3", "user4", "aggregate", "stddev", "jain",
+    ]);
+    for r in &rows {
+        let mut row: Vec<String> = vec![r.model.label().to_string()];
+        row.extend(r.per_user_mbps.iter().map(|v| format!("{v:.0}")));
+        row.push(format!("{:.0}", r.aggregate_mbps));
+        row.push(format!("{:.1}", r.stddev_mbps));
+        row.push(format!("{:.3}", r.jain));
+        t.row(&row);
+    }
+    println!(
+        "Figures 2/9/10 — {USERS}-user contention on Chameleon ({DURATION_S:.0}s, Mbps)"
+    );
+    t.print();
+
+    let res = Fig9Result { rows };
+    let asm = res.aggregate(OptimizerKind::Asm);
+    println!(
+        "  ASM vs HARP: {:.2}x (paper 1.7x) | vs GO: {:.2}x (paper 3.4x) | vs NoOpt: {:.2}x (paper 5x)",
+        asm / res.aggregate(OptimizerKind::Harp).max(1e-9),
+        asm / res.aggregate(OptimizerKind::Globus).max(1e-9),
+        asm / res.aggregate(OptimizerKind::NoOpt).max(1e-9),
+    );
+    println!(
+        "  per-user stddev: ASM {:.1} vs HARP {:.1} (paper: 54.98 vs 115.49)",
+        res.stddev(OptimizerKind::Asm),
+        res.stddev(OptimizerKind::Harp)
+    );
+    res
+}

@@ -1,0 +1,16 @@
+//! One driver per paper table/figure (DESIGN.md §5 maps each to its
+//! bench target).  The benches in `rust/benches/exp_*.rs` and the CLI
+//! `experiment` subcommand call these; every driver prints the same
+//! rows/series the paper reports and returns structured results so
+//! tests can assert the *shape* (who wins, by roughly what factor).
+
+pub mod common;
+pub mod fig1;
+pub mod fig4a;
+pub mod fig4b;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;

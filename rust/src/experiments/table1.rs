@@ -1,0 +1,44 @@
+//! Table 1: system specification of the experimental environments.
+
+use crate::sim::profile::NetProfile;
+use crate::util::table::Table;
+
+pub fn run() -> Table {
+    let mut t = Table::new(&[
+        "profile",
+        "bandwidth",
+        "rtt",
+        "tcp-buffer",
+        "disk-bw",
+        "cores",
+        "max-param",
+    ]);
+    for p in NetProfile::all() {
+        t.row(&[
+            p.name.to_string(),
+            format!("{:.0} Mbps", p.bandwidth_mbps),
+            format!("{:.1} ms", p.rtt_s * 1e3),
+            format!("{:.0} MB", p.tcp_buf_mb),
+            format!("{:.0} MB/s", p.disk_mbps / 8.0),
+            p.cores.to_string(),
+            p.max_param.to_string(),
+        ]);
+    }
+    println!("Table 1 — testbed profiles (paper values; see DESIGN.md §2)");
+    t.print();
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_all_profiles() {
+        let t = super::run();
+        let s = t.render();
+        for name in ["xsede", "didclab", "didclab-xsede", "chameleon"] {
+            assert!(s.contains(name));
+        }
+        assert!(s.contains("10000 Mbps"));
+        assert!(s.contains("40.0 ms"));
+    }
+}

@@ -1,0 +1,102 @@
+//! `twophase` — reproduction of *"A Two-Phase Dynamic Throughput
+//! Optimization Model for Big Data Transfers"* (Nine & Kosar, 2018) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised bottom-up (see `DESIGN.md` for the full map):
+//!
+//! * [`util`] — in-tree replacements for crates unavailable offline
+//!   (seeded RNG, JSON, CLI parsing, stats, linear algebra, a
+//!   property-testing mini-framework and a bench harness);
+//! * [`sim`] — the testbed substrate: a mechanistic wide-area transfer
+//!   simulator (TCP streams, endpoints, background traffic, shared
+//!   bottleneck links) standing in for XSEDE / DIDCLAB / Chameleon;
+//! * [`logs`] — GridFTP-style historical transfer logs: schema,
+//!   synthetic six-week generator, persistent store;
+//! * [`offline`] — the paper's offline phase: log clustering
+//!   (K-means++ / HAC + CH index), piecewise bicubic throughput
+//!   surfaces, Gaussian confidence regions, Hessian maxima, sampling
+//!   regions, and the five-phase additive pipeline;
+//! * [`online`] — the paper's online phase: the Adaptive Sampling
+//!   Module (Algorithm 1), deviation monitoring and dynamic re-tuning;
+//! * [`baselines`] — the seven comparison models of §5 (GO, SP, SC,
+//!   HARP, ANN+OT, NMT, no-op) behind one [`baselines::api::Optimizer`]
+//!   trait;
+//! * [`runtime`] — PJRT execution of the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text via the `xla` crate) with
+//!   native-math parity fallbacks;
+//! * [`coordinator`] — the leader loop: request intake, sample-transfer
+//!   scheduling, chunk streaming, multi-user orchestration, metrics;
+//! * [`experiments`] — one driver per paper table/figure, shared by the
+//!   benches in `rust/benches/` and the CLI.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod experiments;
+pub mod logs;
+pub mod offline;
+pub mod online;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Protocol parameter triple the whole paper optimizes: concurrency,
+/// parallelism, pipelining (§2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Params {
+    /// Concurrency: number of transfer server processes.
+    pub cc: u32,
+    /// Parallelism: TCP streams per process.
+    pub p: u32,
+    /// Pipelining: outstanding file-request queue depth.
+    pub pp: u32,
+}
+
+impl Params {
+    pub const fn new(cc: u32, p: u32, pp: u32) -> Self {
+        Self { cc, p, pp }
+    }
+
+    /// Total data streams opened by this setting (cc × p, §2).
+    pub fn total_streams(&self) -> u32 {
+        self.cc * self.p
+    }
+
+    /// The "no optimization" default of §5.4: cc = p = pp = 1.
+    pub const DEFAULT: Params = Params::new(1, 1, 1);
+
+    /// Clamp each component into `[1, cap]`.
+    pub fn clamp(&self, cap: u32) -> Params {
+        Params::new(
+            self.cc.clamp(1, cap),
+            self.p.clamp(1, cap),
+            self.pp.clamp(1, cap),
+        )
+    }
+}
+
+impl std::fmt::Display for Params {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(cc={}, p={}, pp={})", self.cc, self.p, self.pp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_total_streams() {
+        assert_eq!(Params::new(4, 2, 8).total_streams(), 8);
+        assert_eq!(Params::DEFAULT.total_streams(), 1);
+    }
+
+    #[test]
+    fn params_clamp() {
+        assert_eq!(Params::new(0, 99, 7).clamp(32), Params::new(1, 32, 7));
+    }
+
+    #[test]
+    fn params_display() {
+        assert_eq!(Params::new(2, 3, 4).to_string(), "(cc=2, p=3, pp=4)");
+    }
+}

@@ -1,0 +1,170 @@
+//! Synthetic six-week GridFTP history.
+//!
+//! Transfers arrive as a Poisson process over the log window; each
+//! picks a dataset class, a dataset, and protocol parameters from the
+//! grid users actually try (GridFTP users and tools overwhelmingly use
+//! small powers of two), then records the throughput the simulator
+//! gives under the background load at that instant.
+//!
+//! The parameter *grid* matters: the offline phase builds spline knots
+//! from the distinct (p, cc) values present in the logs, exactly like
+//! the paper's surfaces over historical observations.
+
+use crate::logs::schema::LogEntry;
+use crate::sim::dataset::{Dataset, FileSizeClass};
+use crate::sim::profile::NetProfile;
+use crate::sim::traffic::TrafficProcess;
+use crate::sim::transfer::ThroughputModel;
+use crate::util::rng::Rng;
+use crate::Params;
+
+/// Parameter values observed in the wild (and thus in our logs); these
+/// become the spline knots of the offline surfaces.
+pub const PARAM_GRID: [u32; 8] = [1, 2, 4, 6, 8, 12, 16, 32];
+/// Pipelining values users try.
+pub const PP_GRID: [u32; 5] = [1, 4, 8, 16, 32];
+
+/// Log-generation configuration.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    /// Length of the log window in days (paper: six weeks = 42).
+    pub days: f64,
+    /// Mean transfers per hour across all users of the pair.
+    pub transfers_per_hour: f64,
+    /// Random seed (quoted in EXPERIMENTS.md).
+    pub seed: u64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            days: 42.0,
+            transfers_per_hour: 6.0,
+            seed: 0xB16_DA7A,
+        }
+    }
+}
+
+/// Generate a history for one network profile.
+pub fn generate_history(profile: &NetProfile, cfg: &GeneratorConfig) -> Vec<LogEntry> {
+    let mut rng = Rng::new(cfg.seed ^ 0x6c6f67);
+    let mut traffic = TrafficProcess::new(profile, cfg.seed).with_phase(0.0);
+    let model = ThroughputModel::new(profile.clone());
+
+    let horizon_s = cfg.days * 86_400.0;
+    let mean_gap_s = 3_600.0 / cfg.transfers_per_hour;
+    let mut entries = Vec::new();
+    let mut t = rng.exponential(1.0 / mean_gap_s);
+
+    while t < horizon_s {
+        let class = *rng.choice(&FileSizeClass::all());
+        let dataset = Dataset::sample(class, &mut rng);
+        let params = Params::new(
+            *rng.choice(&PARAM_GRID),
+            *rng.choice(&PARAM_GRID),
+            *rng.choice(&PP_GRID),
+        );
+        let load = traffic.at(t);
+        let th = model.sample(params, &dataset, &load, &mut rng);
+        entries.push(LogEntry {
+            timestamp_s: t,
+            network: profile.name.to_string(),
+            rtt_s: profile.rtt_s,
+            bandwidth_mbps: profile.bandwidth_mbps,
+            avg_file_mb: dataset.avg_file_mb,
+            n_files: dataset.n_files,
+            params,
+            throughput_mbps: th,
+            true_load: load.intensity,
+        });
+        t += rng.exponential(1.0 / mean_gap_s);
+    }
+    entries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> GeneratorConfig {
+        GeneratorConfig {
+            days: 7.0,
+            transfers_per_hour: 8.0,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn volume_matches_rate() {
+        let logs = generate_history(&NetProfile::xsede(), &quick_cfg());
+        let expected = 7.0 * 24.0 * 8.0;
+        assert!(
+            (logs.len() as f64 - expected).abs() < expected * 0.2,
+            "{} vs {expected}",
+            logs.len()
+        );
+    }
+
+    #[test]
+    fn timestamps_sorted_within_horizon() {
+        let logs = generate_history(&NetProfile::xsede(), &quick_cfg());
+        for w in logs.windows(2) {
+            assert!(w[1].timestamp_s > w[0].timestamp_s);
+        }
+        assert!(logs.last().unwrap().timestamp_s < 7.0 * 86_400.0);
+    }
+
+    #[test]
+    fn covers_classes_and_params() {
+        let logs = generate_history(&NetProfile::xsede(), &quick_cfg());
+        for class in FileSizeClass::all() {
+            assert!(
+                logs.iter()
+                    .any(|e| FileSizeClass::classify(e.avg_file_mb) == class),
+                "missing class {class:?}"
+            );
+        }
+        for &cc in &PARAM_GRID {
+            assert!(logs.iter().any(|e| e.params.cc == cc), "missing cc={cc}");
+        }
+    }
+
+    #[test]
+    fn throughputs_positive_and_bounded() {
+        let p = NetProfile::xsede();
+        let logs = generate_history(&p, &quick_cfg());
+        for e in &logs {
+            assert!(e.throughput_mbps > 0.0);
+            // noise can push a sample slightly above the deterministic cap
+            assert!(e.throughput_mbps < p.bandwidth_mbps * 1.3);
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = generate_history(&NetProfile::didclab(), &quick_cfg());
+        let b = generate_history(&NetProfile::didclab(), &quick_cfg());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn load_intensity_correlates_with_throughput() {
+        // same params + dataset class under heavier load => lower median
+        let logs = generate_history(&NetProfile::xsede(), &quick_cfg());
+        let (mut light, mut heavy) = (Vec::new(), Vec::new());
+        for e in &logs {
+            if e.avg_file_mb > 256.0 && e.params.total_streams() >= 16 {
+                if e.true_load < 0.25 {
+                    light.push(e.throughput_mbps);
+                } else if e.true_load > 0.5 {
+                    heavy.push(e.throughput_mbps);
+                }
+            }
+        }
+        if light.len() > 5 && heavy.len() > 5 {
+            let ml = crate::util::stats::median(&light);
+            let mh = crate::util::stats::median(&heavy);
+            assert!(mh < ml, "heavy={mh} light={ml}");
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Historical transfer logs — the input to the offline phase.
+//!
+//! The paper mines *six weeks of GridFTP logs* (§5).  We have no access
+//! to those, so [`generator`] replays thousands of randomized transfers
+//! through the simulator under the diurnal background-traffic process
+//! and records GridFTP-style entries ([`schema::LogEntry`]).  [`store`]
+//! persists logs and offline results as JSON (append-friendly, matching
+//! the paper's "additive" offline analysis).
+
+pub mod generator;
+pub mod schema;
+pub mod store;
+
+pub use generator::{generate_history, GeneratorConfig};
+pub use schema::LogEntry;
+pub use store::LogStore;

@@ -1,0 +1,106 @@
+//! GridFTP-style transfer log records.
+//!
+//! One entry per completed (chunk) transfer, carrying everything Eq 1
+//! conditions on: endpoints/network (`rtt`, `bw`), dataset (`f_avg`,
+//! `n`), protocol parameters (`cc`, `p`, `pp`), the achieved throughput
+//! and a timestamp.  The load-intensity tag is *not* observed by the
+//! offline phase on real logs; the generator records the true value so
+//! tests can validate the load-bucket reconstruction.
+
+use crate::util::json::Value;
+use crate::Params;
+
+/// One historical transfer observation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogEntry {
+    /// Seconds since the epoch of the log window.
+    pub timestamp_s: f64,
+    /// Network profile name (stands in for the endpoint pair).
+    pub network: String,
+    pub rtt_s: f64,
+    pub bandwidth_mbps: f64,
+    pub avg_file_mb: f64,
+    pub n_files: u64,
+    pub params: Params,
+    pub throughput_mbps: f64,
+    /// True normalized external-load intensity at transfer time.
+    /// Hidden ground truth: offline reconstructs its own buckets from
+    /// (timestamp, throughput); experiments use this for validation.
+    pub true_load: f64,
+}
+
+impl LogEntry {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("ts", Value::Num(self.timestamp_s)),
+            ("net", Value::str(self.network.clone())),
+            ("rtt", Value::Num(self.rtt_s)),
+            ("bw", Value::Num(self.bandwidth_mbps)),
+            ("favg", Value::Num(self.avg_file_mb)),
+            ("nf", Value::Num(self.n_files as f64)),
+            ("cc", Value::Num(self.params.cc as f64)),
+            ("p", Value::Num(self.params.p as f64)),
+            ("pp", Value::Num(self.params.pp as f64)),
+            ("th", Value::Num(self.throughput_mbps)),
+            ("load", Value::Num(self.true_load)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Option<LogEntry> {
+        Some(LogEntry {
+            timestamp_s: v.get("ts").as_f64()?,
+            network: v.get("net").as_str()?.to_string(),
+            rtt_s: v.get("rtt").as_f64()?,
+            bandwidth_mbps: v.get("bw").as_f64()?,
+            avg_file_mb: v.get("favg").as_f64()?,
+            n_files: v.get("nf").as_u64()?,
+            params: Params::new(
+                v.get("cc").as_u64()? as u32,
+                v.get("p").as_u64()? as u32,
+                v.get("pp").as_u64()? as u32,
+            ),
+            throughput_mbps: v.get("th").as_f64()?,
+            true_load: v.get("load").as_f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry() -> LogEntry {
+        LogEntry {
+            timestamp_s: 123.5,
+            network: "xsede".into(),
+            rtt_s: 0.04,
+            bandwidth_mbps: 10_000.0,
+            avg_file_mb: 64.0,
+            n_files: 500,
+            params: Params::new(4, 2, 8),
+            throughput_mbps: 3211.75,
+            true_load: 0.4,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let e = entry();
+        let v = e.to_json();
+        let back = LogEntry::from_json(&v).unwrap();
+        assert_eq!(e, back);
+    }
+
+    #[test]
+    fn malformed_json_is_none() {
+        assert!(LogEntry::from_json(&Value::Null).is_none());
+        let incomplete = Value::obj(vec![("ts", Value::Num(1.0))]);
+        assert!(LogEntry::from_json(&incomplete).is_none());
+        // fractional file count is invalid
+        let mut v = entry().to_json();
+        if let Value::Obj(ref mut m) = v {
+            m.insert("nf".into(), Value::Num(2.5));
+        }
+        assert!(LogEntry::from_json(&v).is_none());
+    }
+}

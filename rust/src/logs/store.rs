@@ -1,0 +1,150 @@
+//! Persistent log store: JSON-lines on disk, append-friendly so the
+//! offline analysis stays *additive* ("when new logs are generated ...
+//! we do not need to ... perform analysis on the entire log from
+//! scratch", §4).
+
+use crate::logs::schema::LogEntry;
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// A file-backed, append-only collection of log entries.
+#[derive(Debug)]
+pub struct LogStore {
+    path: PathBuf,
+    entries: Vec<LogEntry>,
+}
+
+impl LogStore {
+    /// Open (or create) a store at `path`, loading existing entries.
+    pub fn open(path: impl AsRef<Path>) -> Result<LogStore> {
+        let path = path.as_ref().to_path_buf();
+        let mut entries = Vec::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading log store {}", path.display()))?;
+            for (i, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let v = Value::parse(line)
+                    .with_context(|| format!("log store line {}", i + 1))?;
+                let e = LogEntry::from_json(&v)
+                    .with_context(|| format!("malformed log entry at line {}", i + 1))?;
+                entries.push(e);
+            }
+        }
+        Ok(LogStore { path, entries })
+    }
+
+    /// An in-memory store (tests, ephemeral experiments).
+    pub fn in_memory() -> LogStore {
+        LogStore {
+            path: PathBuf::new(),
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn entries(&self) -> &[LogEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append entries in memory and (if file-backed) on disk.
+    pub fn append(&mut self, new: &[LogEntry]) -> Result<()> {
+        if !self.path.as_os_str().is_empty() {
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&self.path)
+                .with_context(|| format!("opening {}", self.path.display()))?;
+            for e in new {
+                writeln!(f, "{}", e.to_json())?;
+            }
+        }
+        self.entries.extend_from_slice(new);
+        Ok(())
+    }
+
+    /// Entries for one network, optionally bounded to a time window.
+    pub fn for_network(&self, network: &str, window: Option<(f64, f64)>) -> Vec<&LogEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.network == network)
+            .filter(|e| match window {
+                Some((lo, hi)) => e.timestamp_s >= lo && e.timestamp_s < hi,
+                None => true,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Params;
+
+    fn entry(t: f64, net: &str) -> LogEntry {
+        LogEntry {
+            timestamp_s: t,
+            network: net.into(),
+            rtt_s: 0.04,
+            bandwidth_mbps: 10_000.0,
+            avg_file_mb: 64.0,
+            n_files: 100,
+            params: Params::new(2, 2, 2),
+            throughput_mbps: 1234.5,
+            true_load: 0.3,
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let dir = std::env::temp_dir().join(format!("twophase-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("logs.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let mut s = LogStore::open(&path).unwrap();
+        assert!(s.is_empty());
+        s.append(&[entry(1.0, "xsede"), entry(2.0, "didclab")]).unwrap();
+
+        // appending in a second session preserves earlier entries
+        let mut s2 = LogStore::open(&path).unwrap();
+        assert_eq!(s2.len(), 2);
+        s2.append(&[entry(3.0, "xsede")]).unwrap();
+
+        let s3 = LogStore::open(&path).unwrap();
+        assert_eq!(s3.len(), 3);
+        assert_eq!(s3.entries()[0], entry(1.0, "xsede"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn filters_by_network_and_window() {
+        let mut s = LogStore::in_memory();
+        s.append(&[entry(1.0, "a"), entry(5.0, "a"), entry(9.0, "b")])
+            .unwrap();
+        assert_eq!(s.for_network("a", None).len(), 2);
+        assert_eq!(s.for_network("a", Some((0.0, 2.0))).len(), 1);
+        assert_eq!(s.for_network("b", Some((0.0, 2.0))).len(), 0);
+    }
+
+    #[test]
+    fn corrupted_file_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("twophase-corrupt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{not json\n").unwrap();
+        assert!(LogStore::open(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

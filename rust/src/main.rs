@@ -1,0 +1,276 @@
+//! `twophase` CLI — the leader entrypoint.
+//!
+//! ```text
+//! twophase info                               # profiles + artifact status
+//! twophase gen-logs  --profile xsede --days 14 --out logs.jsonl
+//! twophase offline   --logs logs.jsonl [--pjrt] [--out summary.json]
+//! twophase transfer  --profile xsede --files 64 --avg-mb 512 \
+//!                    [--model asm|harp|annot|go|sp|sc|nmt|noopt] [--peak]
+//! twophase multiuser [--users 4] [--model asm] [--duration 600]
+//! twophase experiment <table1|fig1|fig4a|fig4b|fig5|fig6|fig7|fig8|fig9|all>
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use twophase::baselines::ann_ot::AnnOtModel;
+use twophase::baselines::api::OptimizerKind;
+use twophase::baselines::static_ann::StaticAnnModel;
+use twophase::coordinator::orchestrator::{
+    Orchestrator, OrchestratorConfig, TransferRequest,
+};
+use twophase::experiments;
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::logs::store::LogStore;
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::offline::surface::NativeSurfaceBackend;
+use twophase::runtime::accel::PjrtSurfaceBackend;
+use twophase::runtime::engine::Engine;
+use twophase::sim::dataset::Dataset;
+use twophase::sim::profile::NetProfile;
+use twophase::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("gen-logs") => cmd_gen_logs(&args),
+        Some("offline") => cmd_offline(&args),
+        Some("transfer") => cmd_transfer(&args),
+        Some("multiuser") => cmd_multiuser(&args),
+        Some("experiment") => cmd_experiment(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "twophase — Two-Phase Dynamic Throughput Optimization (Nine & Kosar 2018)\n\
+         subcommands: info | gen-logs | offline | transfer | multiuser | experiment\n\
+         run with no flags for defaults; see README.md for details"
+    );
+}
+
+fn profile_arg(args: &Args) -> Result<NetProfile> {
+    let name = args.get_or("profile", "xsede");
+    NetProfile::by_name(name).with_context(|| format!("unknown profile '{name}'"))
+}
+
+fn model_arg(args: &Args) -> Result<OptimizerKind> {
+    Ok(match args.get_or("model", "asm") {
+        "asm" => OptimizerKind::Asm,
+        "harp" => OptimizerKind::Harp,
+        "annot" => OptimizerKind::AnnOt,
+        "go" => OptimizerKind::Globus,
+        "sp" => OptimizerKind::StaticAnn,
+        "sc" => OptimizerKind::SingleChunk,
+        "nmt" => OptimizerKind::NelderMead,
+        "noopt" => OptimizerKind::NoOpt,
+        other => bail!("unknown model '{other}'"),
+    })
+}
+
+fn cmd_info() -> Result<()> {
+    experiments::table1::run();
+    match Engine::try_default() {
+        Some(e) => println!(
+            "PJRT artifacts: loaded ({} artifacts, platform {})",
+            e.manifest.artifacts.len(),
+            e.platform()
+        ),
+        None => println!("PJRT artifacts: not built (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_gen_logs(args: &Args) -> Result<()> {
+    let profile = profile_arg(args)?;
+    let cfg = GeneratorConfig {
+        days: args.get_f64("days", 42.0),
+        transfers_per_hour: args.get_f64("rate", 8.0),
+        seed: args.get_u64("seed", 0xB16_DA7A),
+    };
+    let logs = generate_history(&profile, &cfg);
+    let out = args.get_or("out", "logs.jsonl");
+    let mut store = LogStore::open(out)?;
+    store.append(&logs)?;
+    println!(
+        "wrote {} log entries for {} ({} days) to {out}",
+        logs.len(),
+        profile.name,
+        cfg.days
+    );
+    Ok(())
+}
+
+fn load_logs(args: &Args) -> Result<Vec<twophase::logs::schema::LogEntry>> {
+    match args.get("logs") {
+        Some(path) => {
+            let store = LogStore::open(path)?;
+            if store.is_empty() {
+                bail!("{path} contains no log entries");
+            }
+            Ok(store.entries().to_vec())
+        }
+        None => {
+            // synthesize a default corpus across all profiles
+            let mut logs = Vec::new();
+            for p in NetProfile::all() {
+                logs.extend(generate_history(
+                    &p,
+                    &GeneratorConfig {
+                        days: args.get_f64("days", 14.0),
+                        transfers_per_hour: 8.0,
+                        seed: 0xB16_DA7A,
+                    },
+                ));
+            }
+            Ok(logs)
+        }
+    }
+}
+
+fn cmd_offline(args: &Args) -> Result<()> {
+    let logs = load_logs(args)?;
+    let cfg = OfflineConfig::default();
+    let kb = if args.flag("pjrt") {
+        let engine = Engine::try_default()
+            .context("--pjrt requested but artifacts are not built (make artifacts)")?;
+        let backend = PjrtSurfaceBackend::new(engine);
+        KnowledgeBase::build(
+            logs,
+            cfg,
+            &backend,
+            &twophase::offline::kmeans::NativeKmeans,
+        )
+    } else {
+        KnowledgeBase::build(
+            logs,
+            cfg,
+            &NativeSurfaceBackend,
+            &twophase::offline::kmeans::NativeKmeans,
+        )
+    };
+    let summary = kb.summary_json();
+    println!("{summary}");
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, summary.to_string())?;
+        println!("summary written to {out}");
+    }
+    Ok(())
+}
+
+fn build_orchestrator(args: &Args) -> Result<Orchestrator> {
+    let logs = load_logs(args)?;
+    let kb = Arc::new(KnowledgeBase::build_native(
+        logs.clone(),
+        OfflineConfig::default(),
+    ));
+    let sp = Arc::new(StaticAnnModel::train(&logs, 32, 0xE1));
+    let annot = Arc::new(AnnOtModel::train(&logs, 32, 0xE2));
+    Ok(Orchestrator::new(kb, sp, annot, OrchestratorConfig::default()))
+}
+
+fn cmd_transfer(args: &Args) -> Result<()> {
+    let profile = profile_arg(args)?;
+    let model = model_arg(args)?;
+    let dataset = Dataset::new(
+        args.get_u64("files", 64),
+        args.get_f64("avg-mb", 512.0),
+    );
+    let orch = build_orchestrator(args)?;
+    let req = TransferRequest {
+        id: 0,
+        profile,
+        dataset,
+        model,
+        seed: args.get_u64("seed", 7),
+        phase_s: if args.flag("peak") {
+            experiments::common::PEAK_PHASE_S
+        } else {
+            experiments::common::OFFPEAK_PHASE_S
+        },
+    };
+    let r = orch.execute(&req);
+    println!(
+        "model={} network={} total={:.0} MB duration={:.1}s",
+        r.model, r.network, r.total_mb, r.duration_s
+    );
+    println!(
+        "avg={:.1} Mbps steady={:.1} Mbps samples={} param-changes={} final={}",
+        r.avg_throughput_mbps,
+        r.steady_throughput_mbps,
+        r.sample_transfers,
+        r.param_changes,
+        r.final_params
+    );
+    if let (Some(pred), Some(acc)) = (r.predicted_mbps, r.accuracy_pct) {
+        println!("predicted={pred:.1} Mbps accuracy={acc:.1}%");
+    }
+    Ok(())
+}
+
+fn cmd_multiuser(args: &Args) -> Result<()> {
+    std::env::set_var("TWOPHASE_DAYS", args.get_or("days", "14"));
+    let _ = experiments::fig9::run();
+    let _ = args.get_usize("users", 4); // documented; fig9 fixes 4 as in the paper
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let run_one = |name: &str| -> Result<()> {
+        match name {
+            "table1" => {
+                experiments::table1::run();
+            }
+            "fig1" => {
+                experiments::fig1::run();
+            }
+            "fig4a" => {
+                experiments::fig4a::run();
+            }
+            "fig4b" => {
+                experiments::fig4b::run();
+            }
+            "fig5" => {
+                experiments::fig5::run();
+            }
+            "fig6" => {
+                experiments::fig6::run();
+            }
+            "fig7" => {
+                experiments::fig7::run();
+            }
+            "fig8" => {
+                experiments::fig8::run();
+            }
+            "fig9" | "fig2" | "fig10" => {
+                experiments::fig9::run();
+            }
+            other => bail!("unknown experiment '{other}'"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in [
+            "table1", "fig1", "fig4a", "fig4b", "fig5", "fig6", "fig7", "fig8", "fig9",
+        ] {
+            println!("\n=== {name} ===");
+            run_one(name)?;
+        }
+    } else {
+        run_one(which)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Calinski–Harabasz index (Eq 4) for choosing the number of clusters:
+//! `CH(m) = [B/(m−1)] / [W/(n−m)]` with B the between-cluster and W the
+//! within-cluster sum of squares.  Larger is better.
+//!
+//! (The paper's Eq 4–6 swap the Φ labels — a typesetting slip; we use
+//! the standard definition the cited index actually has.)
+
+use crate::offline::features::{sqdist, N_FEATURES};
+
+/// CH score of a labelled clustering.  Returns 0 for degenerate cases
+/// (m < 2 or m >= n) so callers can maximize without special-casing.
+pub fn ch_index(points: &[[f64; N_FEATURES]], labels: &[usize]) -> f64 {
+    let n = points.len();
+    assert_eq!(n, labels.len());
+    let m = labels.iter().copied().max().map_or(0, |x| x + 1);
+    if m < 2 || m >= n {
+        return 0.0;
+    }
+
+    // overall mean
+    let mut overall = [0.0; N_FEATURES];
+    for p in points {
+        for f in 0..N_FEATURES {
+            overall[f] += p[f];
+        }
+    }
+    for v in &mut overall {
+        *v /= n as f64;
+    }
+
+    // per-cluster means
+    let mut sums = vec![[0.0; N_FEATURES]; m];
+    let mut counts = vec![0usize; m];
+    for (p, &l) in points.iter().zip(labels) {
+        counts[l] += 1;
+        for f in 0..N_FEATURES {
+            sums[l][f] += p[f];
+        }
+    }
+    let means: Vec<[f64; N_FEATURES]> = (0..m)
+        .map(|c| {
+            let mut mu = [0.0; N_FEATURES];
+            if counts[c] > 0 {
+                for f in 0..N_FEATURES {
+                    mu[f] = sums[c][f] / counts[c] as f64;
+                }
+            }
+            mu
+        })
+        .collect();
+
+    let mut between = 0.0;
+    for c in 0..m {
+        between += counts[c] as f64 * sqdist(&means[c], &overall);
+    }
+    let mut within = 0.0;
+    for (p, &l) in points.iter().zip(labels) {
+        within += sqdist(p, &means[l]);
+    }
+    if within <= 1e-300 {
+        return f64::MAX / 2.0; // perfect separation
+    }
+    (between / (m - 1) as f64) / (within / (n - m) as f64)
+}
+
+/// Pick the k in `2..=k_max` maximizing CH under a clustering function.
+pub fn best_k<F: FnMut(usize) -> Vec<usize>>(
+    points: &[[f64; N_FEATURES]],
+    k_max: usize,
+    mut cluster_fn: F,
+) -> (usize, Vec<usize>, f64) {
+    let mut best = (2usize, Vec::new(), f64::NEG_INFINITY);
+    for k in 2..=k_max.max(2) {
+        let labels = cluster_fn(k);
+        let score = ch_index(points, &labels);
+        if score > best.2 {
+            best = (k, labels, score);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::kmeans::{kmeans, NativeKmeans};
+    use crate::util::rng::Rng;
+
+    fn three_blobs() -> Vec<[f64; N_FEATURES]> {
+        let mut rng = Rng::new(9);
+        let centers = [
+            [0.0, 0.0, 0.0, 0.0],
+            [8.0, 0.0, 0.0, 0.0],
+            [0.0, 8.0, 0.0, 0.0],
+        ];
+        let mut pts = Vec::new();
+        for c in &centers {
+            for _ in 0..40 {
+                let mut p = *c;
+                for f in p.iter_mut() {
+                    *f += rng.normal() * 0.3;
+                }
+                pts.push(p);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn true_k_scores_highest() {
+        let pts = three_blobs();
+        let mut rng = Rng::new(1);
+        let (k, _, score) = best_k(&pts, 6, |k| {
+            kmeans(&pts, k, &mut rng, &NativeKmeans).assignment
+        });
+        assert_eq!(k, 3, "CH should pick the true blob count");
+        assert!(score > 100.0);
+    }
+
+    #[test]
+    fn degenerate_cases_are_zero() {
+        let pts = three_blobs();
+        let all_zero = vec![0usize; pts.len()];
+        assert_eq!(ch_index(&pts, &all_zero), 0.0);
+        let singletons: Vec<usize> = (0..pts.len()).collect();
+        assert_eq!(ch_index(&pts, &singletons), 0.0);
+    }
+
+    #[test]
+    fn good_split_beats_bad_split() {
+        let pts = three_blobs();
+        // true labels
+        let good: Vec<usize> = (0..120).map(|i| i / 40).collect();
+        // random-ish bad labels
+        let bad: Vec<usize> = (0..120).map(|i| i % 3).collect();
+        assert!(ch_index(&pts, &good) > 10.0 * ch_index(&pts, &bad));
+    }
+}

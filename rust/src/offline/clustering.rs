@@ -1,0 +1,228 @@
+//! Clustering orchestration (§4.1.1): featurize a log corpus, choose k
+//! by the CH index, and compare K-means++ against HAC/UPGMA, keeping
+//! whichever scores higher (the paper evaluates both).
+
+use crate::logs::schema::LogEntry;
+use crate::offline::chindex::ch_index;
+use crate::offline::features::{sqdist, FeatureScaler, N_FEATURES};
+use crate::offline::hac::upgma;
+use crate::offline::kmeans::{kmeans, KmeansBackend};
+use crate::util::rng::Rng;
+
+/// Which algorithm won the CH-index comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterAlgo {
+    KmeansPP,
+    HacUpgma,
+}
+
+/// Final clustering over a log corpus.
+#[derive(Debug, Clone)]
+pub struct LogClustering {
+    pub scaler: FeatureScaler,
+    pub centroids: Vec<[f64; N_FEATURES]>,
+    /// per-entry cluster label, parallel to the input corpus
+    pub labels: Vec<usize>,
+    pub k: usize,
+    pub algo: ClusterAlgo,
+    pub ch_score: f64,
+}
+
+impl LogClustering {
+    /// Nearest-centroid lookup for an online query.
+    pub fn assign_query(&self, features: &[f64; N_FEATURES]) -> usize {
+        self.centroids
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                sqdist(features, a)
+                    .partial_cmp(&sqdist(features, b))
+                    .unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// HAC is O(n³); subsample above this size and assign the rest to the
+/// nearest resulting centroid.
+const HAC_MAX_POINTS: usize = 300;
+
+fn centroids_of(
+    points: &[[f64; N_FEATURES]],
+    labels: &[usize],
+    k: usize,
+) -> Vec<[f64; N_FEATURES]> {
+    let mut sums = vec![[0.0; N_FEATURES]; k];
+    let mut counts = vec![0usize; k];
+    for (p, &l) in points.iter().zip(labels) {
+        counts[l] += 1;
+        for f in 0..N_FEATURES {
+            sums[l][f] += p[f];
+        }
+    }
+    (0..k)
+        .map(|c| {
+            let mut mu = [0.0; N_FEATURES];
+            for f in 0..N_FEATURES {
+                mu[f] = if counts[c] > 0 {
+                    sums[c][f] / counts[c] as f64
+                } else {
+                    0.0
+                };
+            }
+            mu
+        })
+        .collect()
+}
+
+fn assign_to_centroids(
+    points: &[[f64; N_FEATURES]],
+    centroids: &[[f64; N_FEATURES]],
+) -> Vec<usize> {
+    points
+        .iter()
+        .map(|p| {
+            centroids
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| sqdist(p, a).partial_cmp(&sqdist(p, b)).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Cluster a log corpus: fit the scaler, sweep k in 2..=k_max with both
+/// algorithms, keep the CH-best labelling.
+pub fn cluster_logs(
+    entries: &[&LogEntry],
+    k_max: usize,
+    seed: u64,
+    backend: &dyn KmeansBackend,
+) -> LogClustering {
+    assert!(!entries.is_empty(), "cannot cluster an empty corpus");
+    let scaler = FeatureScaler::fit(entries);
+    let points: Vec<[f64; N_FEATURES]> =
+        entries.iter().map(|e| scaler.transform(e)).collect();
+    let mut rng = Rng::new(seed ^ 0x636c7573);
+
+    let mut best: Option<LogClustering> = None;
+    for k in 2..=k_max.max(2) {
+        // K-means++
+        let km = kmeans(&points, k, &mut rng, backend);
+        let km_score = ch_index(&points, &km.assignment);
+        let cand_km = LogClustering {
+            scaler: scaler.clone(),
+            centroids: km.centroids.clone(),
+            labels: km.assignment.clone(),
+            k,
+            algo: ClusterAlgo::KmeansPP,
+            ch_score: km_score,
+        };
+        if best.as_ref().map_or(true, |b| km_score > b.ch_score) {
+            best = Some(cand_km);
+        }
+
+        // HAC/UPGMA (subsampled when large)
+        let hac_labels = if points.len() <= HAC_MAX_POINTS {
+            upgma(&points, k)
+        } else {
+            let mut idx: Vec<usize> = (0..points.len()).collect();
+            rng.shuffle(&mut idx);
+            let sample: Vec<[f64; N_FEATURES]> = idx[..HAC_MAX_POINTS]
+                .iter()
+                .map(|&i| points[i])
+                .collect();
+            let sub_labels = upgma(&sample, k);
+            let cents = centroids_of(&sample, &sub_labels, k);
+            assign_to_centroids(&points, &cents)
+        };
+        let hac_score = ch_index(&points, &hac_labels);
+        if best.as_ref().map_or(true, |b| hac_score > b.ch_score) {
+            let cents = centroids_of(&points, &hac_labels, k);
+            best = Some(LogClustering {
+                scaler: scaler.clone(),
+                centroids: cents,
+                labels: hac_labels,
+                k,
+                algo: ClusterAlgo::HacUpgma,
+                ch_score: hac_score,
+            });
+        }
+    }
+    best.expect("k sweep produced at least one candidate")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generator::{generate_history, GeneratorConfig};
+    use crate::offline::kmeans::NativeKmeans;
+    use crate::sim::profile::NetProfile;
+
+    fn corpus() -> Vec<LogEntry> {
+        let cfg = GeneratorConfig {
+            days: 5.0,
+            transfers_per_hour: 6.0,
+            seed: 77,
+        };
+        let mut logs = generate_history(&NetProfile::xsede(), &cfg);
+        logs.extend(generate_history(&NetProfile::didclab(), &cfg));
+        logs
+    }
+
+    #[test]
+    fn clusters_separate_networks() {
+        let logs = corpus();
+        let refs: Vec<&LogEntry> = logs.iter().collect();
+        let c = cluster_logs(&refs, 6, 1, &NativeKmeans);
+        // entries from different networks should essentially never share
+        // a cluster (rtt differs by 200x, bw by 10x)
+        let mut cross = 0usize;
+        let mut total = 0usize;
+        for (i, a) in logs.iter().enumerate() {
+            for (j, b) in logs.iter().enumerate().skip(i + 1).take(50) {
+                if a.network != b.network {
+                    total += 1;
+                    if c.labels[i] == c.labels[j] {
+                        cross += 1;
+                    }
+                }
+                let _ = j;
+            }
+        }
+        assert!(
+            (cross as f64) < 0.05 * total as f64,
+            "{cross}/{total} cross-network pairs share clusters"
+        );
+    }
+
+    #[test]
+    fn query_assignment_is_consistent_with_labels() {
+        let logs = corpus();
+        let refs: Vec<&LogEntry> = logs.iter().collect();
+        let c = cluster_logs(&refs, 6, 2, &NativeKmeans);
+        let mut agree = 0usize;
+        for (i, e) in logs.iter().enumerate().take(200) {
+            let q = c.scaler.transform(e);
+            if c.assign_query(&q) == c.labels[i] {
+                agree += 1;
+            }
+        }
+        // centroid assignment should agree with training labels for the
+        // overwhelming majority (boundary points may flip)
+        assert!(agree > 180, "only {agree}/200 agree");
+    }
+
+    #[test]
+    fn ch_score_positive_and_k_in_range() {
+        let logs = corpus();
+        let refs: Vec<&LogEntry> = logs.iter().collect();
+        let c = cluster_logs(&refs, 6, 3, &NativeKmeans);
+        assert!(c.ch_score > 0.0);
+        assert!((2..=6).contains(&c.k));
+        assert_eq!(c.labels.len(), logs.len());
+        assert!(c.labels.iter().all(|&l| l < c.k));
+    }
+}

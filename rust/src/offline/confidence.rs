@@ -1,0 +1,106 @@
+//! Gaussian confidence regions around fitted surfaces (Eq 12–14).
+//!
+//! Repeated observations at the same parameter point scatter around the
+//! surface (measurement error, route changes, minor queueing — Fig 4a);
+//! the paper wraps each surface in a Gaussian band.  The online phase
+//! asks one question: *is this achieved throughput consistent with this
+//! surface?* — answered by [`ConfidenceRegion::contains`].
+
+use crate::util::stats;
+
+/// Gaussian band around a surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfidenceRegion {
+    /// Residual standard deviation σ of observations vs the fit.
+    pub sigma: f64,
+    /// z multiplier for the acceptance band (paper checks whether the
+    /// sample lies "inside the surface confidence bound").
+    pub z: f64,
+}
+
+impl ConfidenceRegion {
+    /// Build from fit residuals (observed − predicted).  A floor keeps
+    /// the band usable when replication is thin: relative_floor scales
+    /// with the surface magnitude.
+    pub fn from_residuals(residuals: &[f64], surface_scale: f64, z: f64) -> ConfidenceRegion {
+        let sigma_raw = stats::std_pop(residuals);
+        // At least 4% of the surface magnitude: the simulator's sampling
+        // noise alone is ~5% lognormal, and a zero-width band would
+        // reject every future sample.
+        let sigma = sigma_raw.max(0.04 * surface_scale.abs());
+        ConfidenceRegion { sigma, z }
+    }
+
+    /// Is an achieved throughput consistent with a predicted value?
+    pub fn contains(&self, predicted: f64, achieved: f64) -> bool {
+        (achieved - predicted).abs() <= self.z * self.sigma
+    }
+
+    /// Signed deviation in σ units (positive = achieved above surface).
+    pub fn deviation_sigmas(&self, predicted: f64, achieved: f64) -> f64 {
+        (achieved - predicted) / self.sigma
+    }
+
+    pub fn band(&self) -> f64 {
+        self.z * self.sigma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sigma_estimates_noise() {
+        let mut rng = Rng::new(4);
+        let residuals: Vec<f64> = (0..5_000).map(|_| rng.normal_ms(0.0, 25.0)).collect();
+        let c = ConfidenceRegion::from_residuals(&residuals, 100.0, 2.0);
+        assert!((c.sigma - 25.0).abs() < 2.0, "sigma={}", c.sigma);
+    }
+
+    #[test]
+    fn floor_applies_when_replication_thin() {
+        let c = ConfidenceRegion::from_residuals(&[0.0], 1_000.0, 2.0);
+        assert!((c.sigma - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contains_is_symmetric_band() {
+        let c = ConfidenceRegion {
+            sigma: 10.0,
+            z: 2.0,
+        };
+        assert!(c.contains(100.0, 119.9));
+        assert!(c.contains(100.0, 80.1));
+        assert!(!c.contains(100.0, 121.0));
+        assert!(!c.contains(100.0, 79.0));
+    }
+
+    #[test]
+    fn coverage_near_nominal() {
+        // ~95% of Gaussian samples must fall inside a z=1.96 band
+        let mut rng = Rng::new(8);
+        let c = ConfidenceRegion {
+            sigma: 10.0,
+            z: 1.96,
+        };
+        let n = 20_000;
+        let inside = (0..n)
+            .filter(|_| c.contains(500.0, rng.normal_ms(500.0, 10.0)))
+            .count();
+        let frac = inside as f64 / n as f64;
+        assert!((frac - 0.95).abs() < 0.01, "coverage={frac}");
+    }
+
+    #[test]
+    fn deviation_sign() {
+        let c = ConfidenceRegion {
+            sigma: 5.0,
+            z: 2.0,
+        };
+        assert!(c.deviation_sigmas(100.0, 110.0) > 0.0);
+        assert!(c.deviation_sigmas(100.0, 90.0) < 0.0);
+        assert_eq!(c.deviation_sigmas(100.0, 100.0), 0.0);
+    }
+}

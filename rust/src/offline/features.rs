@@ -1,0 +1,167 @@
+//! Log-entry featurization for clustering.
+//!
+//! The paper clusters logs "based on different matrices" — transfers
+//! that behave alike must land together.  We use the Eq-1 conditioning
+//! variables that are *known before a transfer runs*: network (RTT,
+//! bandwidth) and dataset (average file size, file count), log-scaled
+//! (they span orders of magnitude) and z-normalized.
+
+use crate::logs::schema::LogEntry;
+
+/// Number of clustering features.
+pub const N_FEATURES: usize = 4;
+
+/// Raw (un-normalized) feature vector of one entry.
+pub fn raw_features(e: &LogEntry) -> [f64; N_FEATURES] {
+    [
+        e.rtt_s.max(1e-6).ln(),
+        e.bandwidth_mbps.max(1.0).ln(),
+        e.avg_file_mb.max(1e-3).ln(),
+        (e.n_files as f64).max(1.0).ln(),
+    ]
+}
+
+/// Feature normalization (z-score) fitted on a log corpus and reused
+/// for online queries — queries must be scaled exactly like the
+/// training logs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureScaler {
+    pub mean: [f64; N_FEATURES],
+    pub std: [f64; N_FEATURES],
+}
+
+impl FeatureScaler {
+    pub fn fit(entries: &[&LogEntry]) -> FeatureScaler {
+        let n = entries.len().max(1) as f64;
+        let mut mean = [0.0; N_FEATURES];
+        for e in entries {
+            let f = raw_features(e);
+            for k in 0..N_FEATURES {
+                mean[k] += f[k];
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = [0.0; N_FEATURES];
+        for e in entries {
+            let f = raw_features(e);
+            for k in 0..N_FEATURES {
+                var[k] += (f[k] - mean[k]).powi(2);
+            }
+        }
+        let mut std = [0.0; N_FEATURES];
+        for k in 0..N_FEATURES {
+            std[k] = (var[k] / n).sqrt().max(1e-9);
+        }
+        FeatureScaler { mean, std }
+    }
+
+    pub fn apply(&self, raw: [f64; N_FEATURES]) -> [f64; N_FEATURES] {
+        let mut out = [0.0; N_FEATURES];
+        for k in 0..N_FEATURES {
+            out[k] = (raw[k] - self.mean[k]) / self.std[k];
+        }
+        out
+    }
+
+    pub fn transform(&self, e: &LogEntry) -> [f64; N_FEATURES] {
+        self.apply(raw_features(e))
+    }
+
+    /// Featurize an online query (no log entry yet).
+    pub fn transform_query(
+        &self,
+        rtt_s: f64,
+        bandwidth_mbps: f64,
+        avg_file_mb: f64,
+        n_files: u64,
+    ) -> [f64; N_FEATURES] {
+        self.apply([
+            rtt_s.max(1e-6).ln(),
+            bandwidth_mbps.max(1.0).ln(),
+            avg_file_mb.max(1e-3).ln(),
+            (n_files as f64).max(1.0).ln(),
+        ])
+    }
+}
+
+/// Squared Euclidean distance between feature vectors.
+pub fn sqdist(a: &[f64; N_FEATURES], b: &[f64; N_FEATURES]) -> f64 {
+    let mut s = 0.0;
+    for k in 0..N_FEATURES {
+        let d = a[k] - b[k];
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Params;
+
+    fn entry(rtt: f64, bw: f64, favg: f64, nf: u64) -> LogEntry {
+        LogEntry {
+            timestamp_s: 0.0,
+            network: "x".into(),
+            rtt_s: rtt,
+            bandwidth_mbps: bw,
+            avg_file_mb: favg,
+            n_files: nf,
+            params: Params::DEFAULT,
+            throughput_mbps: 1.0,
+            true_load: 0.0,
+        }
+    }
+
+    #[test]
+    fn normalization_zero_mean_unit_std() {
+        let es: Vec<LogEntry> = (1..=20)
+            .map(|i| entry(0.01 * i as f64, 1000.0 * i as f64, i as f64, i * 10))
+            .collect();
+        let refs: Vec<&LogEntry> = es.iter().collect();
+        let sc = FeatureScaler::fit(&refs);
+        let feats: Vec<[f64; 4]> = refs.iter().map(|e| sc.transform(e)).collect();
+        for k in 0..N_FEATURES {
+            let m: f64 = feats.iter().map(|f| f[k]).sum::<f64>() / feats.len() as f64;
+            let v: f64 =
+                feats.iter().map(|f| (f[k] - m).powi(2)).sum::<f64>() / feats.len() as f64;
+            assert!(m.abs() < 1e-9, "feature {k} mean {m}");
+            assert!((v - 1.0).abs() < 1e-6, "feature {k} var {v}");
+        }
+    }
+
+    #[test]
+    fn query_matches_entry_transform() {
+        let es: Vec<LogEntry> = (1..=5)
+            .map(|i| entry(0.04, 1e4, 2.0f64.powi(i), 100))
+            .collect();
+        let refs: Vec<&LogEntry> = es.iter().collect();
+        let sc = FeatureScaler::fit(&refs);
+        let e = &es[2];
+        let a = sc.transform(e);
+        let b = sc.transform_query(e.rtt_s, e.bandwidth_mbps, e.avg_file_mb, e.n_files);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn constant_feature_does_not_blow_up() {
+        let es: Vec<LogEntry> = (0..6).map(|_| entry(0.04, 1e4, 8.0, 100)).collect();
+        let refs: Vec<&LogEntry> = es.iter().collect();
+        let sc = FeatureScaler::fit(&refs);
+        let f = sc.transform(&es[0]);
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn distance_separates_classes() {
+        let small = entry(0.04, 1e4, 1.0, 10_000);
+        let large = entry(0.04, 1e4, 2_000.0, 20);
+        let es = [small.clone(), large.clone()];
+        let refs: Vec<&LogEntry> = es.iter().collect();
+        let sc = FeatureScaler::fit(&refs);
+        let d = sqdist(&sc.transform(&small), &sc.transform(&large));
+        assert!(d > 1.0, "classes should be far apart: {d}");
+    }
+}

@@ -1,0 +1,164 @@
+//! Hierarchical Agglomerative Clustering with UPGMA linkage — the
+//! paper's second clustering option (§4.1.1, Eq 3).
+//!
+//! UPGMA merges the pair of clusters with minimum average inter-point
+//! distance; implemented with a Lance–Williams update on the proximity
+//! matrix (O(n³) worst case — the pipeline subsamples large corpora
+//! before calling this, as noted in DESIGN.md).
+
+use crate::offline::features::{sqdist, N_FEATURES};
+
+/// Cut the UPGMA dendrogram at `k` clusters; returns per-point labels
+/// in 0..k (labels are compacted).
+pub fn upgma(points: &[[f64; N_FEATURES]], k: usize) -> Vec<usize> {
+    let n = points.len();
+    assert!(k >= 1);
+    if n == 0 {
+        return vec![];
+    }
+    let k = k.min(n);
+
+    // active cluster list: (members, size)
+    let mut members: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    let mut active: Vec<bool> = vec![true; n];
+    // proximity matrix of average inter-cluster distances (Euclidean)
+    let mut dist = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for j in i + 1..n {
+            let d = sqdist(&points[i], &points[j]).sqrt();
+            dist[i][j] = d;
+            dist[j][i] = d;
+        }
+    }
+
+    let mut n_active = n;
+    while n_active > k {
+        // find the closest active pair
+        let (mut bi, mut bj, mut bd) = (usize::MAX, usize::MAX, f64::INFINITY);
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            for j in i + 1..n {
+                if !active[j] {
+                    continue;
+                }
+                if dist[i][j] < bd {
+                    bd = dist[i][j];
+                    bi = i;
+                    bj = j;
+                }
+            }
+        }
+        // merge bj into bi; UPGMA (average linkage) Lance–Williams:
+        // d(i∪j, l) = (|i| d(i,l) + |j| d(j,l)) / (|i| + |j|)
+        let (si, sj) = (members[bi].len() as f64, members[bj].len() as f64);
+        for l in 0..n {
+            if !active[l] || l == bi || l == bj {
+                continue;
+            }
+            let d = (si * dist[bi][l] + sj * dist[bj][l]) / (si + sj);
+            dist[bi][l] = d;
+            dist[l][bi] = d;
+        }
+        let moved = std::mem::take(&mut members[bj]);
+        members[bi].extend(moved);
+        active[bj] = false;
+        n_active -= 1;
+    }
+
+    let mut labels = vec![0usize; n];
+    let mut next = 0usize;
+    for i in 0..n {
+        if active[i] {
+            for &m in &members[i] {
+                labels[m] = next;
+            }
+            next += 1;
+        }
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn blob(rng: &mut Rng, center: [f64; N_FEATURES], n: usize) -> Vec<[f64; N_FEATURES]> {
+        (0..n)
+            .map(|_| {
+                let mut p = center;
+                for f in p.iter_mut() {
+                    *f += rng.normal() * 0.05;
+                }
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Rng::new(1);
+        let mut pts = blob(&mut rng, [0.0; N_FEATURES], 20);
+        pts.extend(blob(&mut rng, [5.0; N_FEATURES], 20));
+        let labels = upgma(&pts, 2);
+        let first = labels[0];
+        assert!(labels[..20].iter().all(|&l| l == first));
+        assert!(labels[20..].iter().all(|&l| l == labels[20]));
+        assert_ne!(first, labels[20]);
+    }
+
+    #[test]
+    fn k_one_merges_everything() {
+        let mut rng = Rng::new(2);
+        let pts = blob(&mut rng, [0.0; N_FEATURES], 15);
+        let labels = upgma(&pts, 1);
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn k_equal_n_keeps_singletons() {
+        let mut rng = Rng::new(3);
+        let pts = blob(&mut rng, [0.0; N_FEATURES], 6);
+        let labels = upgma(&pts, 6);
+        let mut seen = labels.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 6);
+    }
+
+    #[test]
+    fn labels_are_compact() {
+        let mut rng = Rng::new(4);
+        let mut pts = blob(&mut rng, [0.0; N_FEATURES], 10);
+        pts.extend(blob(&mut rng, [8.0; N_FEATURES], 10));
+        pts.extend(blob(&mut rng, [16.0; N_FEATURES], 10));
+        let labels = upgma(&pts, 3);
+        let max = *labels.iter().max().unwrap();
+        assert_eq!(max, 2, "labels must be 0..k: {labels:?}");
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(upgma(&[], 3).is_empty());
+        assert_eq!(upgma(&[[1.0; N_FEATURES]], 3), vec![0]);
+    }
+
+    #[test]
+    fn chains_merge_by_average_not_single_link() {
+        // two tight pairs + a chain point between them: average linkage
+        // assigns the chain point to the *closer pair on average*
+        let pts = vec![
+            [0.0, 0.0, 0.0, 0.0],
+            [0.1, 0.0, 0.0, 0.0],
+            [10.0, 0.0, 0.0, 0.0],
+            [10.1, 0.0, 0.0, 0.0],
+            [4.0, 0.0, 0.0, 0.0], // closer to the left pair
+        ];
+        let labels = upgma(&pts, 2);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[2], labels[3]);
+        assert_eq!(labels[4], labels[0]);
+    }
+}

@@ -1,0 +1,248 @@
+//! K-means++ clustering (Arthur & Vassilvitskii 2007) — the paper's
+//! first clustering option (§4.1.1), chosen for its O(log m)
+//! competitiveness guarantee over plain K-means initialization.
+//!
+//! Native Lloyd iterations here; the PJRT-accelerated assignment step
+//! (Pallas pairwise-distance kernel) plugs in via
+//! `runtime::accel::PjrtKmeans`, parity-tested in the integration
+//! suite.
+
+use crate::offline::features::{sqdist, N_FEATURES};
+use crate::util::rng::Rng;
+
+/// Result of one clustering run.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    pub centroids: Vec<[f64; N_FEATURES]>,
+    pub assignment: Vec<usize>,
+    pub inertia: f64,
+}
+
+/// One Lloyd step implemented by a backend (native or PJRT).
+pub trait KmeansBackend {
+    /// Returns (new centroids, assignment, inertia).  Empty clusters
+    /// keep their previous centroid.
+    fn step(
+        &self,
+        points: &[[f64; N_FEATURES]],
+        centroids: &[[f64; N_FEATURES]],
+    ) -> (Vec<[f64; N_FEATURES]>, Vec<usize>, f64);
+}
+
+/// Plain-Rust backend.
+pub struct NativeKmeans;
+
+impl KmeansBackend for NativeKmeans {
+    fn step(
+        &self,
+        points: &[[f64; N_FEATURES]],
+        centroids: &[[f64; N_FEATURES]],
+    ) -> (Vec<[f64; N_FEATURES]>, Vec<usize>, f64) {
+        let k = centroids.len();
+        let mut assignment = vec![0usize; points.len()];
+        let mut inertia = 0.0;
+        let mut sums = vec![[0.0; N_FEATURES]; k];
+        let mut counts = vec![0usize; k];
+        for (pi, p) in points.iter().enumerate() {
+            let mut best = (0usize, f64::INFINITY);
+            for (ci, c) in centroids.iter().enumerate() {
+                let d = sqdist(p, c);
+                if d < best.1 {
+                    best = (ci, d);
+                }
+            }
+            assignment[pi] = best.0;
+            inertia += best.1;
+            counts[best.0] += 1;
+            for f in 0..N_FEATURES {
+                sums[best.0][f] += p[f];
+            }
+        }
+        let new_centroids: Vec<[f64; N_FEATURES]> = (0..k)
+            .map(|ci| {
+                if counts[ci] == 0 {
+                    centroids[ci]
+                } else {
+                    let mut c = [0.0; N_FEATURES];
+                    for f in 0..N_FEATURES {
+                        c[f] = sums[ci][f] / counts[ci] as f64;
+                    }
+                    c
+                }
+            })
+            .collect();
+        (new_centroids, assignment, inertia)
+    }
+}
+
+/// K-means++ seeding: first centroid uniform, the rest D²-weighted.
+pub fn kmeanspp_init(
+    points: &[[f64; N_FEATURES]],
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<[f64; N_FEATURES]> {
+    assert!(!points.is_empty() && k >= 1);
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(points[rng.index(points.len())]);
+    let mut d2: Vec<f64> = points
+        .iter()
+        .map(|p| sqdist(p, &centroids[0]))
+        .collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 1e-18 {
+            // all points coincide with existing centroids
+            points[rng.index(points.len())]
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = points.len() - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            points[chosen]
+        };
+        centroids.push(next);
+        for (i, p) in points.iter().enumerate() {
+            d2[i] = d2[i].min(sqdist(p, &next));
+        }
+    }
+    centroids
+}
+
+/// Full K-means++ run: seeding + Lloyd until convergence (relative
+/// inertia change < tol) or `max_iter`.
+pub fn kmeans(
+    points: &[[f64; N_FEATURES]],
+    k: usize,
+    rng: &mut Rng,
+    backend: &dyn KmeansBackend,
+) -> Clustering {
+    let mut centroids = kmeanspp_init(points, k, rng);
+    let mut last_inertia = f64::INFINITY;
+    let mut assignment = vec![0; points.len()];
+    let mut inertia = 0.0;
+    for _ in 0..100 {
+        let (c, a, i) = backend.step(points, &centroids);
+        centroids = c;
+        assignment = a;
+        inertia = i;
+        if (last_inertia - inertia).abs() <= 1e-9 * last_inertia.max(1e-12) {
+            break;
+        }
+        last_inertia = inertia;
+    }
+    Clustering {
+        centroids,
+        assignment,
+        inertia,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(rng: &mut Rng, centers: &[[f64; N_FEATURES]], per: usize) -> Vec<[f64; N_FEATURES]> {
+        let mut pts = Vec::new();
+        for c in centers {
+            for _ in 0..per {
+                let mut p = *c;
+                for f in p.iter_mut() {
+                    *f += rng.normal() * 0.1;
+                }
+                pts.push(p);
+            }
+        }
+        pts
+    }
+
+    fn well_separated() -> Vec<[f64; N_FEATURES]> {
+        let mut rng = Rng::new(1);
+        blobs(
+            &mut rng,
+            &[
+                [0.0, 0.0, 0.0, 0.0],
+                [10.0, 0.0, 0.0, 0.0],
+                [0.0, 10.0, 0.0, 0.0],
+            ],
+            50,
+        )
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let pts = well_separated();
+        let mut rng = Rng::new(2);
+        let res = kmeans(&pts, 3, &mut rng, &NativeKmeans);
+        // every blob of 50 consecutive points must be pure
+        for b in 0..3 {
+            let labels = &res.assignment[b * 50..(b + 1) * 50];
+            assert!(labels.iter().all(|&l| l == labels[0]), "blob {b} split");
+        }
+        assert!(res.inertia < 150.0 * 0.1, "inertia={}", res.inertia);
+    }
+
+    #[test]
+    fn inertia_nonincreasing_over_steps() {
+        let pts = well_separated();
+        let mut rng = Rng::new(5);
+        let mut centroids = kmeanspp_init(&pts, 3, &mut rng);
+        let mut prev = f64::INFINITY;
+        for _ in 0..10 {
+            let (c, _, inertia) = NativeKmeans.step(&pts, &centroids);
+            assert!(inertia <= prev + 1e-9);
+            prev = inertia;
+            centroids = c;
+        }
+    }
+
+    #[test]
+    fn init_picks_distinct_centroids_when_possible() {
+        let pts = well_separated();
+        let mut rng = Rng::new(7);
+        let cents = kmeanspp_init(&pts, 3, &mut rng);
+        // D^2 seeding on separated blobs lands one centroid per blob
+        // with overwhelming probability
+        let mut hit = [false; 3];
+        for c in &cents {
+            if c[0] < 5.0 && c[1] < 5.0 {
+                hit[0] = true;
+            } else if c[0] >= 5.0 {
+                hit[1] = true;
+            } else {
+                hit[2] = true;
+            }
+        }
+        assert!(hit.iter().all(|&h| h), "{cents:?}");
+    }
+
+    #[test]
+    fn degenerate_identical_points() {
+        let pts = vec![[1.0, 2.0, 3.0, 4.0]; 20];
+        let mut rng = Rng::new(3);
+        let res = kmeans(&pts, 3, &mut rng, &NativeKmeans);
+        assert!(res.inertia < 1e-12);
+        assert!(res.assignment.iter().all(|&a| a < 3));
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let pts = well_separated();
+        let mut rng = Rng::new(4);
+        let res = kmeans(&pts, 1, &mut rng, &NativeKmeans);
+        assert!(res.assignment.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn empty_cluster_keeps_centroid() {
+        let pts = vec![[0.0; N_FEATURES]; 10];
+        let centroids = vec![[0.0; N_FEATURES], [100.0; N_FEATURES]];
+        let (c, a, _) = NativeKmeans.step(&pts, &centroids);
+        assert!(a.iter().all(|&x| x == 0));
+        assert_eq!(c[1], [100.0; N_FEATURES]);
+    }
+}

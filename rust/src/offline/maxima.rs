@@ -1,0 +1,222 @@
+//! Surface maxima via the second-partial-derivative test (§4.1.3).
+//!
+//! Pipeline: dense refinement (the L1 kernel's job on the PJRT path)
+//! proposes candidates as refined-grid local maxima; each candidate is
+//! polished by a few damped-Newton steps on the analytic spline
+//! gradient; the 2×2 Hessian of the (p, cc) slice is then tested for
+//! negative definiteness (both eigenvalues < 0).  Domain-boundary
+//! maxima — where the gradient need not vanish — are kept and flagged.
+
+use crate::offline::spline::BicubicSurface;
+use crate::util::linalg::sym2_eigenvalues;
+
+/// A local maximum of one surface slice.
+#[derive(Debug, Clone, Copy)]
+pub struct LocalMax {
+    pub p: f64,
+    pub cc: f64,
+    pub value: f64,
+    /// Hessian negative definite (true interior max); boundary maxima
+    /// carry `false` here and `on_boundary = true`.
+    pub neg_definite: bool,
+    pub on_boundary: bool,
+}
+
+/// Newton-polish an interior candidate; returns the refined point.
+fn polish(s: &BicubicSurface, mut p: f64, mut cc: f64) -> (f64, f64) {
+    let (plo, phi) = (s.xs[0], *s.xs.last().unwrap());
+    let (clo, chi) = (s.ys[0], *s.ys.last().unwrap());
+    for _ in 0..12 {
+        let jet = s.eval_with_derivs(p, cc);
+        // solve H dx = -grad (2x2)
+        let det = jet.fpp_ * jet.fcccc - jet.fpcc * jet.fpcc;
+        if det.abs() < 1e-12 {
+            break;
+        }
+        let dp = -(jet.fcccc * jet.fp - jet.fpcc * jet.fcc) / det;
+        let dcc = -(jet.fpp_ * jet.fcc - jet.fpcc * jet.fp) / det;
+        // damped step, clamped to the domain
+        let step = 0.8;
+        let np = (p + step * dp).clamp(plo, phi);
+        let ncc = (cc + step * dcc).clamp(clo, chi);
+        if (np - p).abs() < 1e-9 && (ncc - cc).abs() < 1e-9 {
+            p = np;
+            cc = ncc;
+            break;
+        }
+        p = np;
+        cc = ncc;
+    }
+    (p, cc)
+}
+
+/// All local maxima of a surface found on an `rf`-times-refined grid,
+/// sorted by value descending.
+pub fn find_local_maxima(s: &BicubicSurface, rf: usize) -> Vec<LocalMax> {
+    let dense = s.dense_eval(rf);
+    let rows = dense.len();
+    let cols = dense[0].len();
+    let (plo, phi) = (s.xs[0], *s.xs.last().unwrap());
+    let (clo, chi) = (s.ys[0], *s.ys.last().unwrap());
+    let boundary_eps = 1e-6;
+
+    let mut out: Vec<LocalMax> = Vec::new();
+    let mut push_candidate = |p0: f64, cc0: f64| {
+        let (p, cc) = polish(s, p0, cc0);
+        let jet = s.eval_with_derivs(p, cc);
+        let (lo, hi) = sym2_eigenvalues(jet.fpp_, jet.fpcc, jet.fcccc);
+        let on_boundary = (p - plo).abs() < boundary_eps
+            || (p - phi).abs() < boundary_eps
+            || (cc - clo).abs() < boundary_eps
+            || (cc - chi).abs() < boundary_eps;
+        let neg_definite = lo < 0.0 && hi < 0.0;
+        if !neg_definite && !on_boundary {
+            return; // saddle or minimum: rejected by the Hessian test
+        }
+        // dedup: merge with an existing max if within half a knot step
+        let tol = 0.5;
+        for m in &mut out {
+            if (m.p - p).abs() < tol && (m.cc - cc).abs() < tol {
+                if jet.f > m.value {
+                    *m = LocalMax {
+                        p,
+                        cc,
+                        value: jet.f,
+                        neg_definite,
+                        on_boundary,
+                    };
+                }
+                return;
+            }
+        }
+        out.push(LocalMax {
+            p,
+            cc,
+            value: jet.f,
+            neg_definite,
+            on_boundary,
+        });
+    };
+
+    // interior + boundary candidates from the dense refinement; the far
+    // boundary row/col is not sampled by the left-closed refinement, so
+    // scan knot boundary points explicitly afterwards.
+    for i in 0..rows {
+        for j in 0..cols {
+            let v = dense[i][j];
+            let mut is_max = true;
+            'nb: for di in -1i64..=1 {
+                for dj in -1i64..=1 {
+                    if di == 0 && dj == 0 {
+                        continue;
+                    }
+                    let (ni, nj) = (i as i64 + di, j as i64 + dj);
+                    if ni < 0 || nj < 0 || ni >= rows as i64 || nj >= cols as i64 {
+                        continue;
+                    }
+                    if dense[ni as usize][nj as usize] > v {
+                        is_max = false;
+                        break 'nb;
+                    }
+                }
+            }
+            if is_max {
+                let (p0, cc0) = s.refined_to_coords(i, j, rf);
+                push_candidate(p0, cc0);
+            }
+        }
+    }
+    // far edges
+    for &p0 in s.xs.iter() {
+        push_candidate(p0, chi);
+    }
+    for &cc0 in s.ys.iter() {
+        push_candidate(phi, cc0);
+    }
+
+    out.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::surface::knot_lattice;
+
+    fn fit_fn<F: Fn(f64, f64) -> f64>(f: F) -> BicubicSurface {
+        let xs = knot_lattice();
+        let values: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|&p| xs.iter().map(|&cc| f(p, cc)).collect())
+            .collect();
+        BicubicSurface::fit(&xs, &xs, &values)
+    }
+
+    #[test]
+    fn single_interior_peak() {
+        let s = fit_fn(|p, cc| 1_000.0 - (p - 10.0).powi(2) * 4.0 - (cc - 12.0).powi(2) * 3.0);
+        let maxima = find_local_maxima(&s, 8);
+        assert!(!maxima.is_empty());
+        let top = &maxima[0];
+        assert!((top.p - 10.0).abs() < 1.0, "p={}", top.p);
+        assert!((top.cc - 12.0).abs() < 1.0, "cc={}", top.cc);
+        assert!(top.neg_definite, "interior peak must pass the Hessian test");
+        assert!(!top.on_boundary);
+    }
+
+    #[test]
+    fn monotone_surface_max_on_boundary() {
+        let s = fit_fn(|p, cc| 3.0 * p + 2.0 * cc);
+        let maxima = find_local_maxima(&s, 8);
+        let top = &maxima[0];
+        assert!(top.on_boundary);
+        assert!((top.p - 32.0).abs() < 1e-6 && (top.cc - 32.0).abs() < 1e-6);
+        assert!((top.value - (3.0 * 32.0 + 2.0 * 32.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_bumps_found() {
+        let s = fit_fn(|p, cc| {
+            let b1 = 800.0 * (-(p - 4.0).powi(2) / 8.0 - (cc - 4.0).powi(2) / 8.0).exp();
+            let b2 = 600.0 * (-(p - 24.0).powi(2) / 32.0 - (cc - 24.0).powi(2) / 32.0).exp();
+            b1 + b2
+        });
+        let maxima = find_local_maxima(&s, 8);
+        let interior: Vec<&LocalMax> = maxima.iter().filter(|m| m.neg_definite).collect();
+        assert!(interior.len() >= 2, "found {} interior maxima", interior.len());
+        // the two bump locations
+        assert!(interior.iter().any(|m| (m.p - 4.0).abs() < 2.0));
+        assert!(interior.iter().any(|m| (m.p - 24.0).abs() < 4.0));
+        // sorted descending
+        assert!(maxima.windows(2).all(|w| w[0].value >= w[1].value));
+    }
+
+    #[test]
+    fn saddle_is_rejected() {
+        // f = (p-10)^2 - (cc-10)^2 has a saddle at (10, 10); the only
+        // maxima live on the boundary
+        let s = fit_fn(|p, cc| (p - 10.0).powi(2) - (cc - 10.0).powi(2));
+        let maxima = find_local_maxima(&s, 8);
+        for m in &maxima {
+            assert!(
+                m.on_boundary || (m.p - 10.0).abs() > 1.0 || (m.cc - 10.0).abs() > 1.0,
+                "saddle leaked through: {m:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn newton_polish_beats_grid_resolution() {
+        // peak at p = 9.37, cc = 7.21 — off both the knot grid and the
+        // rf=4 refinement lattice
+        let s = fit_fn(|p, cc| -(p - 9.37).powi(2) - (cc - 7.21).powi(2));
+        let maxima = find_local_maxima(&s, 4);
+        let top = &maxima[0];
+        assert!(
+            (top.p - 9.37).abs() < 0.3 && (top.cc - 7.21).abs() < 0.3,
+            "polish failed: ({}, {})",
+            top.p,
+            top.cc
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! The offline phase (§4.1): knowledge discovery over historical logs.
+//!
+//! Five phases, mirroring the paper:
+//! 1. [`clustering`]/[`kmeans`]/[`hac`]/[`chindex`] — cluster logs in
+//!    hierarchy (K-means++ and HAC/UPGMA, cluster count by the
+//!    Calinski–Harabasz index);
+//! 2. [`surface`]/[`spline`] — piecewise bicubic throughput surfaces
+//!    per (cluster × load bucket × pp slice), with [`regression`] as
+//!    the Fig-4(b) accuracy baselines;
+//! 3. [`confidence`] — Gaussian confidence regions (Eq 12–14);
+//! 4. [`maxima`] — surface maxima via the second-partial-derivative
+//!    (Hessian) test;
+//! 5. [`regions`] — suitable sampling regions `R_s = R_m ∪ R_c`
+//!    (Eq 17–19).
+//!
+//! [`pipeline`] chains them into the additive [`pipeline::KnowledgeBase`]
+//! the online phase queries.  The numerically heavy fit+refine step goes
+//! through the [`surface::SurfaceBackend`] trait: [`spline`] provides
+//! the native implementation, `runtime::accel` the PJRT-accelerated one
+//! running the AOT-compiled JAX/Pallas artifacts.
+
+pub mod chindex;
+pub mod clustering;
+pub mod confidence;
+pub mod features;
+pub mod hac;
+pub mod kmeans;
+pub mod maxima;
+pub mod pipeline;
+pub mod regions;
+pub mod regression;
+pub mod spline;
+pub mod surface;
+
+pub use pipeline::{KnowledgeBase, OfflineConfig, SurfaceSet};
+pub use spline::{BicubicSurface, Spline1D};
+pub use surface::ThroughputSurface;

@@ -1,0 +1,600 @@
+//! The five-phase offline pipeline (§4.1) assembled into an additive,
+//! queryable [`KnowledgeBase`]:
+//!
+//! 1. cluster the log corpus ([`crate::offline::clustering`]);
+//! 2. reconstruct external-load intensity per entry (rank of the
+//!    residual against same-parameter peers — real logs do not carry a
+//!    load tag) and bucket it;
+//! 3. per (cluster × bucket × pp slice): assemble the (p, cc) grid and
+//!    batch-fit bicubic surfaces through the [`SurfaceBackend`];
+//! 4. Gaussian confidence region per surface (fit residuals, Eq 12–14);
+//! 5. maxima + suitable sampling regions (Eq 17–19).
+//!
+//! "Additive": [`KnowledgeBase::update`] folds new log entries in by
+//! re-fitting only the clusters they touch — the clustering itself and
+//! every untouched cluster's surfaces are reused, matching §4's "we do
+//! not need to ... perform analysis on the entire log from scratch".
+
+use crate::logs::schema::LogEntry;
+use crate::offline::clustering::{cluster_logs, LogClustering};
+use crate::offline::confidence::ConfidenceRegion;
+use crate::offline::kmeans::{KmeansBackend, NativeKmeans};
+use crate::offline::regions::{suitable_regions, RegionConfig, SamplePoint};
+use crate::offline::surface::{
+    NativeSurfaceBackend, SurfaceBackend, SurfaceGrid, ThroughputSurface,
+};
+use crate::util::json::Value;
+use crate::Params;
+use std::collections::BTreeMap;
+
+/// Offline-phase configuration.
+#[derive(Debug, Clone)]
+pub struct OfflineConfig {
+    /// number of external-load intensity buckets per cluster
+    pub n_load_buckets: usize,
+    /// maximum k for the CH-index sweep
+    pub k_max: usize,
+    /// dense-refinement factor for maxima search
+    pub rf: usize,
+    /// confidence-band width in σ
+    pub z: f64,
+    /// minimum observations for a (bucket, pp) slice to get a surface
+    pub min_slice_obs: usize,
+    pub regions: RegionConfig,
+    pub seed: u64,
+}
+
+impl Default for OfflineConfig {
+    fn default() -> Self {
+        OfflineConfig {
+            n_load_buckets: 4,
+            k_max: 6,
+            rf: 8,
+            z: 2.0,
+            min_slice_obs: 12,
+            regions: RegionConfig::default(),
+            seed: 0x0FF1,
+        }
+    }
+}
+
+/// All surfaces of one load bucket (one per pp slice), plus the
+/// bucket-level optimum the online phase jumps to.
+#[derive(Debug, Clone)]
+pub struct LoadBucketSurfaces {
+    pub bucket: usize,
+    /// reconstructed intensity tag in [0, 1]
+    pub load_intensity: f64,
+    /// mean *true* intensity (generator ground truth) — used only by
+    /// validation experiments, never by the optimizer itself
+    pub true_intensity: f64,
+    pub slices: Vec<ThroughputSurface>,
+    pub optimal_params: Params,
+    pub optimal_th: f64,
+}
+
+impl LoadBucketSurfaces {
+    /// The slice whose pp is closest to `params.pp`.
+    pub fn slice_for(&self, params: Params) -> &ThroughputSurface {
+        self.slices
+            .iter()
+            .min_by_key(|s| (s.pp as i64 - params.pp as i64).abs())
+            .expect("bucket has at least one slice")
+    }
+
+    /// Predict throughput at integer parameters.
+    pub fn predict(&self, params: Params) -> f64 {
+        self.slice_for(params).predict(params)
+    }
+
+    /// Confidence check at the prediction point.
+    pub fn contains(&self, params: Params, achieved: f64) -> bool {
+        let s = self.slice_for(params);
+        s.confidence.contains(s.predict(params), achieved)
+    }
+}
+
+/// Queryable per-(cluster, file-size-class) knowledge: load-sorted
+/// surfaces + sampling regions — exactly what Algorithm 1's `QueryDB`
+/// returns (`F_s, R_s, I_s`).  Clusters are subdivided by file-size
+/// class before surface fitting: throughput at the same (p, cc, pp) is
+/// radically different for 1 MB and 1 GB files, and mixing them would
+/// average the surfaces into uselessness (the paper likewise treats
+/// small/medium/large transfers separately, §5.1).
+#[derive(Debug, Clone)]
+pub struct SurfaceSet {
+    pub cluster: usize,
+    pub class: crate::sim::dataset::FileSizeClass,
+    /// sorted ascending by `load_intensity`
+    pub buckets: Vec<LoadBucketSurfaces>,
+    pub sampling: Vec<SamplePoint>,
+}
+
+impl SurfaceSet {
+    /// Index of the median-load bucket (Algorithm 1 line 3).
+    pub fn median_bucket(&self) -> usize {
+        self.buckets.len() / 2
+    }
+}
+
+/// The offline knowledge base.
+pub struct KnowledgeBase {
+    pub cfg: OfflineConfig,
+    pub clustering: LogClustering,
+    pub sets: Vec<SurfaceSet>,
+    /// retained corpus (enables additive updates)
+    entries: Vec<LogEntry>,
+}
+
+/// Reconstruct per-entry load intensity inside one cluster: entries are
+/// ranked by their residual against the mean throughput of their exact
+/// parameter group; a low residual means heavier external load.
+fn estimate_loads(entries: &[&LogEntry]) -> Vec<f64> {
+    let mut group_sum: BTreeMap<(u32, u32, u32), (f64, usize)> = BTreeMap::new();
+    for e in entries {
+        let k = (e.params.cc, e.params.p, e.params.pp);
+        let g = group_sum.entry(k).or_insert((0.0, 0));
+        g.0 += e.throughput_mbps;
+        g.1 += 1;
+    }
+    let residual: Vec<f64> = entries
+        .iter()
+        .map(|e| {
+            let k = (e.params.cc, e.params.p, e.params.pp);
+            let (s, n) = group_sum[&k];
+            let mean = s / n as f64;
+            if mean > 0.0 {
+                e.throughput_mbps / mean
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    // rank -> intensity: the smallest residual is the heaviest load
+    let mut order: Vec<usize> = (0..residual.len()).collect();
+    order.sort_by(|&a, &b| residual[a].partial_cmp(&residual[b]).unwrap());
+    let n = residual.len().max(2) as f64;
+    let mut intensity = vec![0.0; residual.len()];
+    for (rank, &idx) in order.iter().enumerate() {
+        intensity[idx] = 1.0 - rank as f64 / (n - 1.0);
+    }
+    intensity
+}
+
+/// Build the surfaces of one (cluster, file-size-class) slice.
+fn build_cluster_set(
+    cluster: usize,
+    class: crate::sim::dataset::FileSizeClass,
+    entries: &[&LogEntry],
+    cfg: &OfflineConfig,
+    backend: &dyn SurfaceBackend,
+) -> SurfaceSet {
+    let loads = estimate_loads(entries);
+    let nb = cfg.n_load_buckets;
+
+    // (bucket, pp) -> observations
+    let mut slices: BTreeMap<(usize, u32), Vec<(Params, f64)>> = BTreeMap::new();
+    let mut bucket_loads: Vec<Vec<f64>> = vec![Vec::new(); nb];
+    let mut bucket_true: Vec<Vec<f64>> = vec![Vec::new(); nb];
+    for (e, &load) in entries.iter().zip(&loads) {
+        let b = ((load * nb as f64) as usize).min(nb - 1);
+        bucket_loads[b].push(load);
+        bucket_true[b].push(e.true_load);
+        slices
+            .entry((b, e.params.pp))
+            .or_default()
+            .push((e.params, e.throughput_mbps));
+    }
+
+    // assemble grids slice by slice, batching the backend call
+    let mut grid_meta: Vec<(usize, u32, SurfaceGrid, Vec<(Params, f64)>)> = Vec::new();
+    for ((b, pp), obs) in slices {
+        if obs.len() < cfg.min_slice_obs {
+            continue;
+        }
+        let grid = SurfaceGrid::from_observations(&obs);
+        grid_meta.push((b, pp, grid, obs));
+    }
+
+    let mut buckets: Vec<LoadBucketSurfaces> = (0..nb)
+        .map(|b| LoadBucketSurfaces {
+            bucket: b,
+            load_intensity: crate::util::stats::mean(&bucket_loads[b]),
+            true_intensity: crate::util::stats::mean(&bucket_true[b]),
+            slices: Vec::new(),
+            optimal_params: Params::DEFAULT,
+            optimal_th: 0.0,
+        })
+        .collect();
+
+    if !grid_meta.is_empty() {
+        let xs = grid_meta[0].2.xs.clone();
+        let ys = grid_meta[0].2.ys.clone();
+        let values: Vec<Vec<Vec<f64>>> =
+            grid_meta.iter().map(|(_, _, g, _)| g.values.clone()).collect();
+        let fits = backend.fit_batch(&xs, &ys, &values, cfg.rf);
+
+        for ((b, pp, grid, obs), fitted) in grid_meta.into_iter().zip(fits) {
+            // Gaussian confidence from fit residuals (Eq 12-14)
+            let residuals: Vec<f64> = obs
+                .iter()
+                .map(|(q, th)| th - fitted.surface.eval(q.p as f64, q.cc as f64))
+                .collect();
+            let confidence =
+                ConfidenceRegion::from_residuals(&residuals, fitted.max_th, cfg.z);
+            let mut optimal_params = Params::new(
+                fitted.max_at.1.round().max(1.0) as u32,
+                fitted.max_at.0.round().max(1.0) as u32,
+                pp,
+            );
+            let mut optimal_th = fitted.max_th;
+            // anti-overshoot guard: a spline ridge can extrapolate past
+            // anything actually observed (oscillation near steep decay);
+            // when the fitted max clears the best *observed* cell by
+            // more than the confidence band, trust the data
+            let mut best_obs: Option<(Params, f64)> = None;
+            for (i, row) in grid.counts.iter().enumerate() {
+                for (j, &n) in row.iter().enumerate() {
+                    if n > 0 {
+                        let v = grid.values[i][j];
+                        if best_obs.map_or(true, |(_, b)| v > b) {
+                            best_obs = Some((
+                                Params::new(grid.ys[j] as u32, grid.xs[i] as u32, pp),
+                                v,
+                            ));
+                        }
+                    }
+                }
+            }
+            if let Some((q, v)) = best_obs {
+                if optimal_th > v + confidence.band() {
+                    optimal_params = q;
+                    optimal_th = v;
+                }
+            }
+            let bucket_intensity = buckets[b].load_intensity;
+            buckets[b].slices.push(ThroughputSurface {
+                pp,
+                load_bucket: b,
+                load_intensity: bucket_intensity,
+                fitted,
+                confidence,
+                optimal_params,
+                optimal_th,
+                n_obs: obs.len(),
+                coverage: grid.coverage,
+            });
+        }
+    }
+
+    // bucket optima = best slice
+    for b in &mut buckets {
+        if let Some(best) = b
+            .slices
+            .iter()
+            .max_by(|x, y| x.optimal_th.partial_cmp(&y.optimal_th).unwrap())
+        {
+            b.optimal_params = best.optimal_params;
+            b.optimal_th = best.optimal_th;
+        }
+        b.slices.sort_by_key(|s| s.pp);
+    }
+    // drop empty buckets, sort by load
+    buckets.retain(|b| !b.slices.is_empty());
+    buckets.sort_by(|a, b| a.load_intensity.partial_cmp(&b.load_intensity).unwrap());
+
+    let all_surfaces: Vec<ThroughputSurface> = buckets
+        .iter()
+        .flat_map(|b| b.slices.iter().cloned())
+        .collect();
+    let sampling = suitable_regions(&all_surfaces, &cfg.regions);
+
+    SurfaceSet {
+        cluster,
+        class,
+        buckets,
+        sampling,
+    }
+}
+
+impl KnowledgeBase {
+    /// Full offline analysis over a log corpus.
+    pub fn build(
+        entries: Vec<LogEntry>,
+        cfg: OfflineConfig,
+        surface_backend: &dyn SurfaceBackend,
+        kmeans_backend: &dyn KmeansBackend,
+    ) -> KnowledgeBase {
+        assert!(!entries.is_empty(), "offline analysis needs logs");
+        let refs: Vec<&LogEntry> = entries.iter().collect();
+        let clustering = cluster_logs(&refs, cfg.k_max, cfg.seed, kmeans_backend);
+        let mut sets = Vec::new();
+        for c in 0..clustering.k {
+            for class in crate::sim::dataset::FileSizeClass::all() {
+                let members: Vec<&LogEntry> = entries
+                    .iter()
+                    .zip(&clustering.labels)
+                    .filter(|(e, &l)| {
+                        l == c
+                            && crate::sim::dataset::FileSizeClass::classify(e.avg_file_mb)
+                                == class
+                    })
+                    .map(|(e, _)| e)
+                    .collect();
+                if members.len() < cfg.min_slice_obs {
+                    continue;
+                }
+                let set = build_cluster_set(c, class, &members, &cfg, surface_backend);
+                if !set.buckets.is_empty() {
+                    sets.push(set);
+                }
+            }
+        }
+        KnowledgeBase {
+            cfg,
+            clustering,
+            sets,
+            entries,
+        }
+    }
+
+    /// Convenience: build with the native backends.
+    pub fn build_native(entries: Vec<LogEntry>, cfg: OfflineConfig) -> KnowledgeBase {
+        KnowledgeBase::build(entries, cfg, &NativeSurfaceBackend, &NativeKmeans)
+    }
+
+    /// Algorithm-1 `QueryDB`: the surface set of the closest cluster.
+    pub fn query(
+        &self,
+        rtt_s: f64,
+        bandwidth_mbps: f64,
+        avg_file_mb: f64,
+        n_files: u64,
+    ) -> Option<&SurfaceSet> {
+        let f = self
+            .clustering
+            .scaler
+            .transform_query(rtt_s, bandwidth_mbps, avg_file_mb, n_files);
+        let cluster = self.clustering.assign_query(&f);
+        let class = crate::sim::dataset::FileSizeClass::classify(avg_file_mb);
+        self.sets
+            .iter()
+            .find(|s| s.cluster == cluster && s.class == class)
+            // class determines the parameter regime more than cluster:
+            // prefer a same-class set from another cluster over a
+            // different-class set from the right cluster
+            .or_else(|| self.sets.iter().find(|s| s.class == class))
+            .or_else(|| self.sets.iter().find(|s| s.cluster == cluster))
+            .or_else(|| {
+                // nothing matched: fall back to any available set
+                self.sets.first()
+            })
+    }
+
+    /// Additive update: append new entries, re-fit only the clusters
+    /// they land in.
+    pub fn update(&mut self, new_entries: Vec<LogEntry>, surface_backend: &dyn SurfaceBackend) {
+        if new_entries.is_empty() {
+            return;
+        }
+        let mut touched: Vec<usize> = Vec::new();
+        for e in &new_entries {
+            let f = self.clustering.scaler.transform(e);
+            let c = self.clustering.assign_query(&f);
+            if !touched.contains(&c) {
+                touched.push(c);
+            }
+            self.clustering.labels.push(c);
+        }
+        self.entries.extend(new_entries);
+
+        for c in touched {
+            for class in crate::sim::dataset::FileSizeClass::all() {
+                let members: Vec<&LogEntry> = self
+                    .entries
+                    .iter()
+                    .zip(&self.clustering.labels)
+                    .filter(|(e, &l)| {
+                        l == c
+                            && crate::sim::dataset::FileSizeClass::classify(e.avg_file_mb)
+                                == class
+                    })
+                    .map(|(e, _)| e)
+                    .collect();
+                if members.len() < self.cfg.min_slice_obs {
+                    continue;
+                }
+                let rebuilt =
+                    build_cluster_set(c, class, &members, &self.cfg, surface_backend);
+                if rebuilt.buckets.is_empty() {
+                    continue;
+                }
+                if let Some(slot) = self
+                    .sets
+                    .iter_mut()
+                    .find(|s| s.cluster == c && s.class == class)
+                {
+                    *slot = rebuilt;
+                } else {
+                    self.sets.push(rebuilt);
+                }
+            }
+        }
+    }
+
+    pub fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total number of fitted surfaces across clusters.
+    pub fn n_surfaces(&self) -> usize {
+        self.sets
+            .iter()
+            .map(|s| s.buckets.iter().map(|b| b.slices.len()).sum::<usize>())
+            .sum()
+    }
+
+    /// Compact JSON summary (CLI `offline --out`).
+    pub fn summary_json(&self) -> Value {
+        Value::obj(vec![
+            ("entries", Value::Num(self.n_entries() as f64)),
+            ("clusters", Value::Num(self.clustering.k as f64)),
+            ("ch_score", Value::Num(self.clustering.ch_score)),
+            ("surfaces", Value::Num(self.n_surfaces() as f64)),
+            (
+                "sets",
+                Value::Arr(
+                    self.sets
+                        .iter()
+                        .map(|s| {
+                            Value::obj(vec![
+                                ("cluster", Value::Num(s.cluster as f64)),
+                                ("buckets", Value::Num(s.buckets.len() as f64)),
+                                (
+                                    "sampling_points",
+                                    Value::Num(s.sampling.len() as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generator::{generate_history, GeneratorConfig};
+    use crate::sim::profile::NetProfile;
+
+    fn history(days: f64, seed: u64) -> Vec<LogEntry> {
+        generate_history(
+            &NetProfile::xsede(),
+            &GeneratorConfig {
+                days,
+                transfers_per_hour: 12.0,
+                seed,
+            },
+        )
+    }
+
+    fn kb(days: f64) -> KnowledgeBase {
+        KnowledgeBase::build_native(history(days, 42), OfflineConfig::default())
+    }
+
+    #[test]
+    fn builds_surfaces_from_history() {
+        let kb = kb(14.0);
+        assert!(kb.clustering.k >= 2);
+        assert!(kb.n_surfaces() > 0, "no surfaces fitted");
+        for set in &kb.sets {
+            for b in &set.buckets {
+                assert!(!b.slices.is_empty());
+                assert!(b.optimal_th > 0.0);
+                assert!((1..=32).contains(&b.optimal_params.p));
+            }
+            // buckets sorted by load
+            for w in set.buckets.windows(2) {
+                assert!(w[0].load_intensity <= w[1].load_intensity);
+            }
+        }
+    }
+
+    #[test]
+    fn load_reconstruction_correlates_with_truth() {
+        let kb = kb(14.0);
+        // within each set, bucket order by estimated load must broadly
+        // agree with the mean true intensity
+        let mut checked = 0;
+        for set in &kb.sets {
+            if set.buckets.len() >= 2 {
+                let first = set.buckets.first().unwrap();
+                let last = set.buckets.last().unwrap();
+                assert!(
+                    last.true_intensity >= first.true_intensity - 0.08,
+                    "bucket order disagrees with ground truth: {} vs {}",
+                    first.true_intensity,
+                    last.true_intensity
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn heavier_buckets_predict_lower_peaks() {
+        let kb = kb(14.0);
+        let mut checked = 0;
+        for set in &kb.sets {
+            if set.buckets.len() >= 3 {
+                let lightest = set.buckets.first().unwrap().optimal_th;
+                let heaviest = set.buckets.last().unwrap().optimal_th;
+                // allow some slack: sparse heavy buckets are noisy
+                if heaviest < lightest {
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 0, "no set shows load ordering in peak throughput");
+    }
+
+    #[test]
+    fn query_returns_relevant_cluster() {
+        let kb = kb(14.0);
+        let p = NetProfile::xsede();
+        let set = kb.query(p.rtt_s, p.bandwidth_mbps, 1_000.0, 50);
+        assert!(set.is_some());
+        let set = set.unwrap();
+        assert!(!set.buckets.is_empty());
+        assert!(!set.sampling.is_empty());
+    }
+
+    #[test]
+    fn additive_update_only_touches_affected_clusters() {
+        let mut kb = kb(10.0);
+        let before_surfaces = kb.n_surfaces();
+        let before_entries = kb.n_entries();
+        let extra = history(3.0, 777);
+        let n_extra = extra.len();
+        kb.update(extra, &NativeSurfaceBackend);
+        assert_eq!(kb.n_entries(), before_entries + n_extra);
+        assert!(kb.n_surfaces() >= before_surfaces.saturating_sub(2));
+        // labels stay consistent
+        assert_eq!(kb.clustering.labels.len(), kb.n_entries());
+    }
+
+    #[test]
+    fn surfaces_predict_training_data_reasonably() {
+        let entries = history(14.0, 42);
+        let kb = KnowledgeBase::build_native(entries.clone(), OfflineConfig::default());
+        // median relative error of per-bucket predictions on training
+        // points should be modest (surfaces average over load-bucket
+        // noise, so individual entries deviate)
+        let mut errs = Vec::new();
+        for e in entries.iter().take(500) {
+            if let Some(set) = kb.query(e.rtt_s, e.bandwidth_mbps, e.avg_file_mb, e.n_files) {
+                // best-matching bucket for this entry's observed value
+                let best = set
+                    .buckets
+                    .iter()
+                    .map(|b| (b.predict(e.params) - e.throughput_mbps).abs())
+                    .fold(f64::INFINITY, f64::min);
+                errs.push(best / e.throughput_mbps.max(1.0));
+            }
+        }
+        let med = crate::util::stats::median(&errs);
+        assert!(med < 0.30, "median relative error {med}");
+    }
+
+    #[test]
+    fn median_bucket_index() {
+        let kb = kb(10.0);
+        for set in &kb.sets {
+            let m = set.median_bucket();
+            assert!(m < set.buckets.len());
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Suitable sampling regions `R_s = R_m ∪ R_c` (§4.1.4, Eq 17–19).
+//!
+//! * `R_m`: neighborhoods of radius `r_d` around every surface's
+//!   maxima — where the payoff lives;
+//! * `R_c`: the γ-point uniform sample ranked by the max–min surface
+//!   separation `Δ_min(u) = min_{i≠j} |f_i(u) − f_j(u)|` (Eq 18),
+//!   keeping the λ most *distinguishing* points — sampling there tells
+//!   the online phase which load surface it is on fastest.
+
+use crate::offline::surface::ThroughputSurface;
+use crate::util::rng::Rng;
+use crate::Params;
+
+/// A candidate sample point with its provenance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplePoint {
+    pub params: Params,
+    /// Δ_min separation score (0 for R_m members, Eq 18 value for R_c).
+    pub separation: f64,
+    pub from_maxima: bool,
+}
+
+/// Configuration for region extraction.
+#[derive(Debug, Clone)]
+pub struct RegionConfig {
+    /// neighborhood radius around maxima, in parameter units (r_d)
+    pub r_d: f64,
+    /// uniform sample size (γ)
+    pub gamma: usize,
+    /// how many top-separation points to keep (λ)
+    pub lambda: usize,
+    pub seed: u64,
+}
+
+impl Default for RegionConfig {
+    fn default() -> Self {
+        RegionConfig {
+            r_d: 2.0,
+            gamma: 256,
+            lambda: 8,
+            seed: 0x5247,
+        }
+    }
+}
+
+fn clamp_param(v: f64, lo: f64, hi: f64) -> u32 {
+    (v.round().clamp(lo, hi)) as u32
+}
+
+/// Extract `R_s` for a set of same-cluster surfaces (any mix of load
+/// buckets / pp slices).  Deduplicated on integer parameters.
+pub fn suitable_regions(surfaces: &[ThroughputSurface], cfg: &RegionConfig) -> Vec<SamplePoint> {
+    let mut out: Vec<SamplePoint> = Vec::new();
+    if surfaces.is_empty() {
+        return out;
+    }
+    let xs = &surfaces[0].fitted.surface.xs;
+    let ys = &surfaces[0].fitted.surface.ys;
+    let (plo, phi) = (xs[0], *xs.last().unwrap());
+    let (clo, chi) = (ys[0], *ys.last().unwrap());
+
+    let mut push = |pt: SamplePoint| {
+        if !out.iter().any(|q| q.params == pt.params) {
+            out.push(pt);
+        }
+    };
+
+    // R_m: maxima neighborhoods (center + r_d-offset cross)
+    for s in surfaces {
+        let (mp, mcc) = s.fitted.max_at;
+        let offsets = [
+            (0.0, 0.0),
+            (cfg.r_d, 0.0),
+            (-cfg.r_d, 0.0),
+            (0.0, cfg.r_d),
+            (0.0, -cfg.r_d),
+        ];
+        for (dp, dcc) in offsets {
+            push(SamplePoint {
+                params: Params::new(
+                    clamp_param(mcc + dcc, clo, chi),
+                    clamp_param(mp + dp, plo, phi),
+                    s.pp,
+                ),
+                separation: 0.0,
+                from_maxima: true,
+            });
+        }
+    }
+
+    // R_c: Eq 17-18 uniform sample ranked by Δ_min
+    if surfaces.len() >= 2 {
+        let mut rng = Rng::new(cfg.seed);
+        let mut scored: Vec<SamplePoint> = Vec::with_capacity(cfg.gamma);
+        for _ in 0..cfg.gamma {
+            let p = rng.uniform(plo, phi);
+            let cc = rng.uniform(clo, chi);
+            // Δ_min over all surface pairs at this coordinate
+            let vals: Vec<f64> = surfaces
+                .iter()
+                .map(|s| s.fitted.surface.eval(p, cc))
+                .collect();
+            let mut dmin = f64::INFINITY;
+            for i in 0..vals.len() {
+                for j in i + 1..vals.len() {
+                    dmin = dmin.min((vals[i] - vals[j]).abs());
+                }
+            }
+            // the pp of the surface whose value is largest here: the
+            // most informative slice to actually transfer with
+            let best_slice = surfaces
+                .iter()
+                .zip(&vals)
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(s, _)| s.pp)
+                .unwrap_or(surfaces[0].pp);
+            scored.push(SamplePoint {
+                params: Params::new(
+                    clamp_param(cc, clo, chi),
+                    clamp_param(p, plo, phi),
+                    best_slice,
+                ),
+                separation: dmin,
+                from_maxima: false,
+            });
+        }
+        scored.sort_by(|a, b| b.separation.partial_cmp(&a.separation).unwrap());
+        for pt in scored.into_iter().take(cfg.lambda) {
+            push(pt);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::confidence::ConfidenceRegion;
+    use crate::offline::spline::BicubicSurface;
+    use crate::offline::surface::{knot_lattice, FittedSurface};
+
+    fn surface_from_fn<F: Fn(f64, f64) -> f64>(
+        f: F,
+        pp: u32,
+        bucket: usize,
+        max_at: (f64, f64),
+    ) -> ThroughputSurface {
+        let xs = knot_lattice();
+        let values: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|&p| xs.iter().map(|&cc| f(p, cc)).collect())
+            .collect();
+        let surface = BicubicSurface::fit(&xs, &xs, &values);
+        let max_th = f(max_at.0, max_at.1);
+        ThroughputSurface {
+            pp,
+            load_bucket: bucket,
+            load_intensity: bucket as f64 / 4.0,
+            fitted: FittedSurface {
+                surface,
+                max_th,
+                max_at,
+                grid_mean: 0.0,
+                grid_std: 1.0,
+            },
+            confidence: ConfidenceRegion {
+                sigma: 10.0,
+                z: 2.0,
+            },
+            optimal_params: Params::new(max_at.1 as u32, max_at.0 as u32, pp),
+            optimal_th: max_th,
+            n_obs: 64,
+            coverage: 1.0,
+        }
+    }
+
+    fn two_surfaces() -> Vec<ThroughputSurface> {
+        vec![
+            // far apart at high (p, cc), identical near the origin
+            surface_from_fn(|p, cc| p * cc, 4, 0, (32.0, 32.0)),
+            surface_from_fn(|p, cc| 0.25 * p * cc, 4, 3, (32.0, 32.0)),
+        ]
+    }
+
+    #[test]
+    fn includes_maxima_neighborhoods() {
+        let ss = two_surfaces();
+        let pts = suitable_regions(&ss, &RegionConfig::default());
+        // the shared maximum (32, 32) must be present
+        assert!(pts
+            .iter()
+            .any(|q| q.from_maxima && q.params.p == 32 && q.params.cc == 32));
+        // and its r_d = 2 neighborhood
+        assert!(pts.iter().any(|q| q.from_maxima && q.params.p == 30));
+    }
+
+    #[test]
+    fn separation_points_prefer_distinguishing_regions() {
+        let ss = two_surfaces();
+        let cfg = RegionConfig::default();
+        let pts = suitable_regions(&ss, &cfg);
+        let rc: Vec<&SamplePoint> = pts.iter().filter(|q| !q.from_maxima).collect();
+        assert!(!rc.is_empty());
+        // |f1 - f2| = 0.75 p·cc grows with p·cc: the kept points must
+        // skew towards the high-product corner
+        let mean_product: f64 = rc
+            .iter()
+            .map(|q| q.params.p as f64 * q.params.cc as f64)
+            .sum::<f64>()
+            / rc.len() as f64;
+        assert!(mean_product > 300.0, "mean p*cc = {mean_product}");
+        // scores must be sorted-ish: all kept scores above the typical
+        for q in &rc {
+            assert!(q.separation > 0.0);
+        }
+    }
+
+    #[test]
+    fn no_duplicate_parameter_points() {
+        let ss = two_surfaces();
+        let pts = suitable_regions(&ss, &RegionConfig::default());
+        for (i, a) in pts.iter().enumerate() {
+            for b in pts.iter().skip(i + 1) {
+                assert_ne!(a.params, b.params);
+            }
+        }
+    }
+
+    #[test]
+    fn single_surface_yields_only_maxima_region() {
+        let ss = vec![surface_from_fn(|p, cc| p + cc, 8, 1, (32.0, 32.0))];
+        let pts = suitable_regions(&ss, &RegionConfig::default());
+        assert!(pts.iter().all(|q| q.from_maxima));
+        assert!(!pts.is_empty());
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(suitable_regions(&[], &RegionConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn params_stay_in_domain() {
+        let ss = two_surfaces();
+        let pts = suitable_regions(&ss, &RegionConfig::default());
+        for q in &pts {
+            assert!((1..=32).contains(&q.params.p));
+            assert!((1..=32).contains(&q.params.cc));
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Polynomial-regression surface baselines (§4.1.2 / Fig 4b): the paper
+//! compares quadratic and cubic least-squares regression in (p, cc, pp)
+//! against the piecewise cubic spline and finds the spline wins —
+//! lower-order models underfit, global high-order models overfit.
+
+use crate::util::linalg::{least_squares, Mat};
+use crate::Params;
+
+/// Degree of the polynomial surface model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Degree {
+    Quadratic,
+    Cubic,
+}
+
+/// Monomial design row for (p, cc, pp) up to `degree` total degree.
+fn design_row(degree: Degree, p: f64, cc: f64, pp: f64) -> Vec<f64> {
+    let max_deg = match degree {
+        Degree::Quadratic => 2u32,
+        Degree::Cubic => 3u32,
+    };
+    let mut row = Vec::new();
+    for a in 0..=max_deg {
+        for b in 0..=max_deg - a {
+            for c in 0..=max_deg - a - b {
+                row.push(p.powi(a as i32) * cc.powi(b as i32) * pp.powi(c as i32));
+            }
+        }
+    }
+    row
+}
+
+/// A fitted polynomial throughput model th ≈ poly(p, cc, pp).
+#[derive(Debug, Clone)]
+pub struct PolySurface {
+    pub degree: Degree,
+    pub coeffs: Vec<f64>,
+    /// input standardization (keeps the normal equations conditioned)
+    scale: [f64; 3],
+}
+
+impl PolySurface {
+    /// Least-squares fit from (params, throughput) observations.
+    /// Returns None with < coefficients observations or a singular fit.
+    pub fn fit(degree: Degree, obs: &[(Params, f64)]) -> Option<PolySurface> {
+        if obs.is_empty() {
+            return None;
+        }
+        let scale = [
+            obs.iter().map(|(q, _)| q.p as f64).fold(1.0, f64::max),
+            obs.iter().map(|(q, _)| q.cc as f64).fold(1.0, f64::max),
+            obs.iter().map(|(q, _)| q.pp as f64).fold(1.0, f64::max),
+        ];
+        let rows: Vec<Vec<f64>> = obs
+            .iter()
+            .map(|(q, _)| {
+                design_row(
+                    degree,
+                    q.p as f64 / scale[0],
+                    q.cc as f64 / scale[1],
+                    q.pp as f64 / scale[2],
+                )
+            })
+            .collect();
+        let ncoef = rows[0].len();
+        if obs.len() < ncoef {
+            return None;
+        }
+        let a = Mat::from_rows(&rows);
+        let b: Vec<f64> = obs.iter().map(|(_, th)| *th).collect();
+        let coeffs = least_squares(&a, &b)?;
+        Some(PolySurface {
+            degree,
+            coeffs,
+            scale,
+        })
+    }
+
+    pub fn predict(&self, params: Params) -> f64 {
+        let row = design_row(
+            self.degree,
+            params.p as f64 / self.scale[0],
+            params.cc as f64 / self.scale[1],
+            params.pp as f64 / self.scale[2],
+        );
+        row.iter().zip(&self.coeffs).map(|(x, c)| x * c).sum()
+    }
+
+    /// Argmax over the bounded integer grid (the regression analogue of
+    /// the spline maxima search; HARP's online step uses this).
+    pub fn argmax_on_grid(&self, cap: u32) -> (Params, f64) {
+        let vals: Vec<u32> = [1u32, 2, 3, 4, 6, 8, 12, 16, 24, 32]
+            .into_iter()
+            .filter(|&v| v <= cap)
+            .collect();
+        let mut best = (Params::DEFAULT, f64::NEG_INFINITY);
+        for &cc in &vals {
+            for &p in &vals {
+                for &pp in &vals {
+                    let q = Params::new(cc, p, pp);
+                    let v = self.predict(q);
+                    if v > best.1 {
+                        best = (q, v);
+                    }
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_truth(q: Params) -> f64 {
+        let (p, cc, pp) = (q.p as f64, q.cc as f64, q.pp as f64);
+        100.0 + 20.0 * p - 1.5 * p * p + 10.0 * cc - 0.8 * cc * cc + 2.0 * pp - 0.1 * pp * pp
+            + 0.3 * p * cc
+    }
+
+    fn grid_obs<F: Fn(Params) -> f64>(f: F) -> Vec<(Params, f64)> {
+        let mut obs = Vec::new();
+        for &cc in &[1u32, 2, 4, 8, 16, 32] {
+            for &p in &[1u32, 2, 4, 8, 16] {
+                for &pp in &[1u32, 4, 16] {
+                    let q = Params::new(cc, p, pp);
+                    obs.push((q, f(q)));
+                }
+            }
+        }
+        obs
+    }
+
+    #[test]
+    fn quadratic_recovers_quadratic_truth() {
+        let obs = grid_obs(quad_truth);
+        let m = PolySurface::fit(Degree::Quadratic, &obs).unwrap();
+        for (q, th) in &obs {
+            let pred = m.predict(*q);
+            assert!(
+                (pred - th).abs() < 1e-5 * th.abs().max(1.0),
+                "{q}: {pred} vs {th}"
+            );
+        }
+    }
+
+    #[test]
+    fn cubic_fits_cubic_term_quadratic_cannot() {
+        let cubic_truth = |q: Params| quad_truth(q) + 0.05 * (q.p as f64).powi(3);
+        let obs = grid_obs(cubic_truth);
+        let mq = PolySurface::fit(Degree::Quadratic, &obs).unwrap();
+        let mc = PolySurface::fit(Degree::Cubic, &obs).unwrap();
+        let err = |m: &PolySurface| -> f64 {
+            obs.iter()
+                .map(|(q, th)| (m.predict(*q) - th).powi(2))
+                .sum()
+        };
+        assert!(err(&mc) < err(&mq) * 0.1, "cubic should fit far better");
+    }
+
+    #[test]
+    fn too_few_observations_is_none() {
+        let obs = vec![(Params::new(1, 1, 1), 10.0); 3];
+        assert!(PolySurface::fit(Degree::Quadratic, &obs).is_none());
+    }
+
+    #[test]
+    fn argmax_lands_near_true_peak() {
+        // peak of quad_truth: p ≈ 20/3, cc ≈ 6.4 (within grid), pp ≈ 10
+        let obs = grid_obs(quad_truth);
+        let m = PolySurface::fit(Degree::Quadratic, &obs).unwrap();
+        let (best, _) = m.argmax_on_grid(32);
+        assert!((4..=8).contains(&best.p), "{best}");
+        assert!((4..=8).contains(&best.cc), "{best}");
+        assert!((8..=16).contains(&best.pp), "{best}");
+    }
+
+    #[test]
+    fn design_row_sizes() {
+        assert_eq!(design_row(Degree::Quadratic, 1.0, 1.0, 1.0).len(), 10);
+        assert_eq!(design_row(Degree::Cubic, 1.0, 1.0, 1.0).len(), 20);
+    }
+}

@@ -1,0 +1,418 @@
+//! Natural cubic splines and tensor-product bicubic surfaces — the
+//! native mirror of the L2 JAX graphs in `python/compile/model.py`
+//! (same construction, same normalized-local-coordinate coefficient
+//! layout `k = 4a + b` for `u^a v^b`), parity-tested against the PJRT
+//! artifacts in `rust/tests/integration_runtime.rs`.
+
+use crate::util::linalg::thomas;
+
+/// 1-D natural cubic spline through (xs, ys).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spline1D {
+    pub xs: Vec<f64>,
+    /// per-interval coefficients in normalized local coords:
+    /// g_i(u) = c0 + c1 u + c2 u² + c3 u³, u = (x − xs[i]) / h_i
+    pub coeffs: Vec<[f64; 4]>,
+}
+
+/// Second derivatives M_i of the natural cubic spline (M_0 = M_n = 0).
+pub fn natural_spline_m(xs: &[f64], ys: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    assert_eq!(n, ys.len());
+    assert!(n >= 2, "need at least 2 knots");
+    let mut m = vec![0.0; n];
+    if n == 2 {
+        return m;
+    }
+    let h: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+    let k = n - 2;
+    let mut sub = vec![0.0; k];
+    let mut diag = vec![0.0; k];
+    let mut sup = vec![0.0; k];
+    let mut rhs = vec![0.0; k];
+    for i in 0..k {
+        sub[i] = h[i] / 6.0;
+        diag[i] = (h[i] + h[i + 1]) / 3.0;
+        sup[i] = h[i + 1] / 6.0;
+        rhs[i] = (ys[i + 2] - ys[i + 1]) / h[i + 1] - (ys[i + 1] - ys[i]) / h[i];
+    }
+    let sol = thomas(&sub, &diag, &sup, &rhs).expect("spline system is SPD");
+    m[1..=k].copy_from_slice(&sol);
+    m
+}
+
+impl Spline1D {
+    /// Fit through strictly increasing knots.
+    pub fn fit(xs: &[f64], ys: &[f64]) -> Spline1D {
+        assert!(
+            xs.windows(2).all(|w| w[1] > w[0]),
+            "knots must be strictly increasing"
+        );
+        let m = natural_spline_m(xs, ys);
+        let n = xs.len();
+        let mut coeffs = Vec::with_capacity(n - 1);
+        for i in 0..n - 1 {
+            let h = xs[i + 1] - xs[i];
+            let a0 = ys[i];
+            let a1 = (ys[i + 1] - ys[i]) / h - h * (2.0 * m[i] + m[i + 1]) / 6.0;
+            let a2 = m[i] / 2.0;
+            let a3 = (m[i + 1] - m[i]) / (6.0 * h);
+            coeffs.push([a0, a1 * h, a2 * h * h, a3 * h * h * h]);
+        }
+        Spline1D {
+            xs: xs.to_vec(),
+            coeffs,
+        }
+    }
+
+    /// Interval index for x (clamped to the domain).
+    fn interval(&self, x: f64) -> usize {
+        let n = self.xs.len();
+        match self.xs.binary_search_by(|k| k.partial_cmp(&x).unwrap()) {
+            Ok(i) => i.min(n - 2),
+            Err(i) => i.saturating_sub(1).min(n - 2),
+        }
+    }
+
+    /// Evaluate (clamped extrapolation at the boundary intervals).
+    pub fn eval(&self, x: f64) -> f64 {
+        let i = self.interval(x);
+        let h = self.xs[i + 1] - self.xs[i];
+        let u = (x - self.xs[i]) / h;
+        let c = &self.coeffs[i];
+        c[0] + u * (c[1] + u * (c[2] + u * c[3]))
+    }
+}
+
+/// Tensor-product natural bicubic surface over a (p, cc) knot grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BicubicSurface {
+    /// knots along the first axis (p)
+    pub xs: Vec<f64>,
+    /// knots along the second axis (cc)
+    pub ys: Vec<f64>,
+    /// patch coefficients [GP-1][GC-1][16], k = 4a+b for u^a v^b
+    pub coeffs: Vec<Vec<[f64; 16]>>,
+}
+
+impl BicubicSurface {
+    /// Fit from grid values `values[i][j] = f(xs[i], ys[j])`
+    /// (spline-of-splines; identical to `compile.model.fit_bicubic`).
+    pub fn fit(xs: &[f64], ys: &[f64], values: &[Vec<f64>]) -> BicubicSurface {
+        let gp = xs.len();
+        let gc = ys.len();
+        assert!(gp >= 2 && gc >= 2);
+        assert_eq!(values.len(), gp);
+        assert!(values.iter().all(|r| r.len() == gc), "ragged value grid");
+
+        // 1) spline along cc for every row: row_coeffs[i][j][b]
+        let mut row_coeffs = vec![vec![[0.0; 4]; gc - 1]; gp];
+        for i in 0..gp {
+            let s = Spline1D::fit(ys, &values[i]);
+            row_coeffs[i] = s.coeffs;
+        }
+        // 2) spline along p of each row coefficient: for every (j, b)
+        let mut coeffs = vec![vec![[0.0f64; 16]; gc - 1]; gp - 1];
+        let mut samples = vec![0.0; gp];
+        for j in 0..gc - 1 {
+            for b in 0..4 {
+                for i in 0..gp {
+                    samples[i] = row_coeffs[i][j][b];
+                }
+                let s = Spline1D::fit(xs, &samples);
+                for i in 0..gp - 1 {
+                    for a in 0..4 {
+                        coeffs[i][j][4 * a + b] = s.coeffs[i][a];
+                    }
+                }
+            }
+        }
+        BicubicSurface {
+            xs: xs.to_vec(),
+            ys: ys.to_vec(),
+            coeffs,
+        }
+    }
+
+    fn locate(knots: &[f64], x: f64) -> usize {
+        let n = knots.len();
+        match knots.binary_search_by(|k| k.partial_cmp(&x).unwrap()) {
+            Ok(i) => i.min(n - 2),
+            Err(i) => i.saturating_sub(1).min(n - 2),
+        }
+    }
+
+    /// Evaluate at (p, cc), clamped to the knot domain.
+    pub fn eval(&self, p: f64, cc: f64) -> f64 {
+        let (i, j, u, v) = self.local(p, cc);
+        let c = &self.coeffs[i][j];
+        let mut acc = 0.0;
+        let mut up = 1.0;
+        for a in 0..4 {
+            let mut vp = 1.0;
+            for b in 0..4 {
+                acc += c[4 * a + b] * up * vp;
+                vp *= v;
+            }
+            up *= u;
+        }
+        acc
+    }
+
+    fn local(&self, p: f64, cc: f64) -> (usize, usize, f64, f64) {
+        let i = Self::locate(&self.xs, p);
+        let j = Self::locate(&self.ys, cc);
+        let hu = self.xs[i + 1] - self.xs[i];
+        let hv = self.ys[j + 1] - self.ys[j];
+        let u = (p - self.xs[i]) / hu;
+        let v = (cc - self.ys[j]) / hv;
+        (i, j, u, v)
+    }
+
+    /// Value, gradient and Hessian at (p, cc) in *knot units* (the
+    /// normalized-local derivatives rescaled by the patch sizes), for
+    /// the second-partial-derivative maxima test.
+    pub fn eval_with_derivs(&self, p: f64, cc: f64) -> SurfaceJet {
+        let (i, j, u, v) = self.local(p, cc);
+        let hu = self.xs[i + 1] - self.xs[i];
+        let hv = self.ys[j + 1] - self.ys[j];
+        let c = &self.coeffs[i][j];
+        let (mut f, mut fu, mut fv, mut fuu, mut fuv, mut fvv) =
+            (0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+        let upow = [1.0, u, u * u, u * u * u];
+        let vpow = [1.0, v, v * v, v * v * v];
+        for a in 0..4usize {
+            for b in 0..4usize {
+                let cab = c[4 * a + b];
+                f += cab * upow[a] * vpow[b];
+                if a >= 1 {
+                    fu += cab * a as f64 * upow[a - 1] * vpow[b];
+                }
+                if b >= 1 {
+                    fv += cab * b as f64 * upow[a] * vpow[b - 1];
+                }
+                if a >= 2 {
+                    fuu += cab * (a * (a - 1)) as f64 * upow[a - 2] * vpow[b];
+                }
+                if a >= 1 && b >= 1 {
+                    fuv += cab * (a * b) as f64 * upow[a - 1] * vpow[b - 1];
+                }
+                if b >= 2 {
+                    fvv += cab * (b * (b - 1)) as f64 * upow[a] * vpow[b - 2];
+                }
+            }
+        }
+        SurfaceJet {
+            f,
+            fp: fu / hu,
+            fcc: fv / hv,
+            fpp_: fuu / (hu * hu),
+            fpcc: fuv / (hu * hv),
+            fcccc: fvv / (hv * hv),
+        }
+    }
+
+    /// Dense left-closed refinement: out[(gp-1)·rf][(gc-1)·rf] matching
+    /// the L1 Pallas kernel's sampling exactly.
+    pub fn dense_eval(&self, rf: usize) -> Vec<Vec<f64>> {
+        let gp1 = self.coeffs.len();
+        let gc1 = self.coeffs[0].len();
+        let mut out = vec![vec![0.0; gc1 * rf]; gp1 * rf];
+        for i in 0..gp1 {
+            for qi in 0..rf {
+                let u = qi as f64 / rf as f64;
+                let upow = [1.0, u, u * u, u * u * u];
+                for j in 0..gc1 {
+                    let c = &self.coeffs[i][j];
+                    for qj in 0..rf {
+                        let v = qj as f64 / rf as f64;
+                        let vpow = [1.0, v, v * v, v * v * v];
+                        let mut acc = 0.0;
+                        for a in 0..4 {
+                            for b in 0..4 {
+                                acc += c[4 * a + b] * upow[a] * vpow[b];
+                            }
+                        }
+                        out[i * rf + qi][j * rf + qj] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Refined-grid coordinate → (p, cc) in knot units.
+    pub fn refined_to_coords(&self, i: usize, j: usize, rf: usize) -> (f64, f64) {
+        let pi = i / rf;
+        let pj = j / rf;
+        let u = (i % rf) as f64 / rf as f64;
+        let v = (j % rf) as f64 / rf as f64;
+        let p = self.xs[pi] + u * (self.xs[pi + 1] - self.xs[pi]);
+        let cc = self.ys[pj] + v * (self.ys[pj + 1] - self.ys[pj]);
+        (p, cc)
+    }
+}
+
+/// Value + first/second derivatives of a surface at a point.
+#[derive(Debug, Clone, Copy)]
+pub struct SurfaceJet {
+    pub f: f64,
+    pub fp: f64,
+    pub fcc: f64,
+    pub fpp_: f64,
+    pub fpcc: f64,
+    pub fcccc: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn spline1d_interpolates_knots() {
+        let xs = [1.0, 2.0, 4.0, 7.0];
+        let ys = [3.0, -1.0, 2.0, 0.5];
+        let s = Spline1D::fit(&xs, &ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert!((s.eval(*x) - y).abs() < 1e-10, "at {x}");
+        }
+    }
+
+    #[test]
+    fn spline1d_reproduces_line_exactly() {
+        let xs = [0.0, 1.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        let s = Spline1D::fit(&xs, &ys);
+        for x in [0.25, 0.5, 1.7, 3.9] {
+            assert!((s.eval(x) - (2.0 * x + 1.0)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn spline1d_c2_continuity_at_knots() {
+        let xs = [0.0, 1.0, 2.5, 3.0, 5.0];
+        let ys = [1.0, 3.0, -2.0, 0.0, 4.0];
+        let s = Spline1D::fit(&xs, &ys);
+        // numerical second derivative continuity at interior knots
+        let d2 = |x: f64| {
+            let h = 1e-4;
+            (s.eval(x - h) - 2.0 * s.eval(x) + s.eval(x + h)) / (h * h)
+        };
+        for &k in &xs[1..4] {
+            let left = d2(k - 1e-3);
+            let right = d2(k + 1e-3);
+            assert!(
+                (left - right).abs() < 0.3,
+                "kink at {k}: {left} vs {right}"
+            );
+        }
+    }
+
+    #[test]
+    fn bicubic_interpolates_grid() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys = [1.0, 3.0, 5.0];
+        let values = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![2.0, 5.0, 4.0],
+            vec![3.0, 7.0, 6.0],
+            vec![2.0, 4.0, 9.0],
+        ];
+        let s = BicubicSurface::fit(&xs, &ys, &values);
+        for (i, &x) in xs.iter().enumerate() {
+            for (j, &y) in ys.iter().enumerate() {
+                assert!(
+                    (s.eval(x, y) - values[i][j]).abs() < 1e-9,
+                    "at ({x},{y})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bicubic_reproduces_bilinear_product() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys = [1.0, 3.0, 5.0];
+        let values: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|&x| ys.iter().map(|&y| x * y).collect())
+            .collect();
+        let s = BicubicSurface::fit(&xs, &ys, &values);
+        for p in [1.0, 1.5, 3.3, 6.2, 8.0] {
+            for cc in [1.0, 2.1, 4.9] {
+                assert!((s.eval(p, cc) - p * cc).abs() < 1e-9, "at ({p},{cc})");
+            }
+        }
+    }
+
+    #[test]
+    fn derivs_match_finite_differences() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys = [1.0, 3.0, 5.0, 9.0];
+        let values = vec![
+            vec![1.0, 2.0, 3.0, 1.0],
+            vec![2.0, 6.0, 4.0, 2.0],
+            vec![3.0, 7.0, 8.0, 3.0],
+            vec![2.0, 4.0, 5.0, 1.0],
+        ];
+        let s = BicubicSurface::fit(&xs, &ys, &values);
+        let (p, cc) = (3.0, 4.0);
+        let jet = s.eval_with_derivs(p, cc);
+        let h = 1e-5;
+        let fp = (s.eval(p + h, cc) - s.eval(p - h, cc)) / (2.0 * h);
+        let fcc = (s.eval(p, cc + h) - s.eval(p, cc - h)) / (2.0 * h);
+        let fpp = (s.eval(p + h, cc) - 2.0 * jet.f + s.eval(p - h, cc)) / (h * h);
+        assert!((jet.f - s.eval(p, cc)).abs() < 1e-12);
+        assert!((jet.fp - fp).abs() < 1e-5, "{} vs {fp}", jet.fp);
+        assert!((jet.fcc - fcc).abs() < 1e-5);
+        assert!((jet.fpp_ - fpp).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dense_eval_matches_pointwise_eval() {
+        let xs = [1.0, 2.0, 4.0];
+        let ys = [1.0, 3.0, 5.0];
+        let values = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![2.0, 6.0, 4.0],
+            vec![3.0, 7.0, 8.0],
+        ];
+        let s = BicubicSurface::fit(&xs, &ys, &values);
+        let rf = 4;
+        let dense = s.dense_eval(rf);
+        for i in 0..dense.len() {
+            for j in 0..dense[0].len() {
+                let (p, cc) = s.refined_to_coords(i, j, rf);
+                assert!(
+                    (dense[i][j] - s.eval(p, cc)).abs() < 1e-10,
+                    "mismatch at refined ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_interpolation_and_boundedness() {
+        prop::run("bicubic interpolates random grids", 40, |g| {
+            let gp = g.usize_in(3..=7);
+            let gc = g.usize_in(3..=7);
+            let xs = g.knots(gp);
+            let ys = g.knots(gc);
+            let values: Vec<Vec<f64>> = (0..gp)
+                .map(|_| (0..gc).map(|_| g.f64_in(0.0..100.0)).collect())
+                .collect();
+            let s = BicubicSurface::fit(&xs, &ys, &values);
+            for i in 0..gp {
+                for j in 0..gc {
+                    let got = s.eval(xs[i], ys[j]);
+                    assert!(
+                        (got - values[i][j]).abs() < 1e-7,
+                        "knot ({i},{j}): {got} vs {}",
+                        values[i][j]
+                    );
+                }
+            }
+        });
+    }
+}

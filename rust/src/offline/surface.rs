@@ -1,0 +1,324 @@
+//! Throughput-surface assembly (§4.1.2): turn a cluster's log entries
+//! into per-(load-bucket, pp-slice) value grids over the (p, cc) knot
+//! lattice, fit bicubic surfaces through a pluggable backend (native
+//! math or the PJRT-compiled JAX/Pallas pipeline), and attach Gaussian
+//! confidence regions.
+
+use crate::logs::generator::PARAM_GRID;
+use crate::offline::confidence::ConfidenceRegion;
+use crate::offline::spline::BicubicSurface;
+use crate::Params;
+
+/// The shared knot lattice: the distinct p/cc values present in
+/// real-world logs (tools use small powers of two — see
+/// `logs::generator`).  Fixed so surface batches share knots, which is
+/// what lets the AOT artifacts use one static shape.
+pub fn knot_lattice() -> Vec<f64> {
+    PARAM_GRID.iter().map(|&v| v as f64).collect()
+}
+
+/// A (p, cc) value grid with replication counts, one pp-slice of one
+/// load bucket of one cluster.
+#[derive(Debug, Clone)]
+pub struct SurfaceGrid {
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    pub values: Vec<Vec<f64>>,
+    pub counts: Vec<Vec<usize>>,
+    /// fraction of cells with at least one observation
+    pub coverage: f64,
+}
+
+impl SurfaceGrid {
+    /// Accumulate observations onto the lattice (cell mean).  Cells
+    /// without data are filled by iterative neighbor averaging so the
+    /// spline fit stays well-posed; `coverage` records how much was
+    /// real data.
+    pub fn from_observations(obs: &[(Params, f64)]) -> SurfaceGrid {
+        let xs = knot_lattice();
+        let ys = knot_lattice();
+        let gp = xs.len();
+        let gc = ys.len();
+        let mut sum = vec![vec![0.0f64; gc]; gp];
+        let mut counts = vec![vec![0usize; gc]; gp];
+        let idx_of = |v: u32| xs.iter().position(|&k| k == v as f64);
+        for (q, th) in obs {
+            if let (Some(i), Some(j)) = (idx_of(q.p), idx_of(q.cc)) {
+                sum[i][j] += th;
+                counts[i][j] += 1;
+            }
+        }
+        let mut values = vec![vec![f64::NAN; gc]; gp];
+        let mut filled = 0usize;
+        for i in 0..gp {
+            for j in 0..gc {
+                if counts[i][j] > 0 {
+                    values[i][j] = sum[i][j] / counts[i][j] as f64;
+                    filled += 1;
+                }
+            }
+        }
+        let coverage = filled as f64 / (gp * gc) as f64;
+
+        // iterative fill: every NaN becomes the mean of its non-NaN
+        // 4-neighbours until the grid is complete
+        let mut guard = 0;
+        while values.iter().flatten().any(|v| v.is_nan()) {
+            let snapshot = values.clone();
+            for i in 0..gp {
+                for j in 0..gc {
+                    if snapshot[i][j].is_nan() {
+                        let mut acc = 0.0;
+                        let mut n = 0usize;
+                        let mut push = |v: f64| {
+                            if !v.is_nan() {
+                                acc += v;
+                                n += 1;
+                            }
+                        };
+                        if i > 0 {
+                            push(snapshot[i - 1][j]);
+                        }
+                        if i + 1 < gp {
+                            push(snapshot[i + 1][j]);
+                        }
+                        if j > 0 {
+                            push(snapshot[i][j - 1]);
+                        }
+                        if j + 1 < gc {
+                            push(snapshot[i][j + 1]);
+                        }
+                        if n > 0 {
+                            values[i][j] = acc / n as f64;
+                        }
+                    }
+                }
+            }
+            guard += 1;
+            if guard > gp + gc {
+                // fully empty grid: zero-fill
+                for row in &mut values {
+                    for v in row.iter_mut() {
+                        if v.is_nan() {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        SurfaceGrid {
+            xs,
+            ys,
+            values,
+            counts,
+            coverage,
+        }
+    }
+}
+
+/// Output of a surface fit, backend-independent.
+#[derive(Debug, Clone)]
+pub struct FittedSurface {
+    pub surface: BicubicSurface,
+    /// dense-refinement maximum (folded with the knot-grid max)
+    pub max_th: f64,
+    /// (p, cc) coordinates of the maximum
+    pub max_at: (f64, f64),
+    pub grid_mean: f64,
+    pub grid_std: f64,
+}
+
+/// Backend for the batched fit + dense-refine + stats step.  The native
+/// implementation lives here; `runtime::accel::PjrtSurfaceBackend` runs
+/// the same computation through the AOT artifacts (parity-tested).
+pub trait SurfaceBackend {
+    /// All grids share (xs, ys).  `rf` is the dense refinement factor.
+    fn fit_batch(
+        &self,
+        xs: &[f64],
+        ys: &[f64],
+        values: &[Vec<Vec<f64>>],
+        rf: usize,
+    ) -> Vec<FittedSurface>;
+
+    fn name(&self) -> &'static str {
+        "backend"
+    }
+}
+
+/// Pure-Rust backend (offline::spline).
+pub struct NativeSurfaceBackend;
+
+impl SurfaceBackend for NativeSurfaceBackend {
+    fn fit_batch(
+        &self,
+        xs: &[f64],
+        ys: &[f64],
+        values: &[Vec<Vec<f64>>],
+        rf: usize,
+    ) -> Vec<FittedSurface> {
+        values
+            .iter()
+            .map(|grid| {
+                let surface = BicubicSurface::fit(xs, ys, grid);
+                let dense = surface.dense_eval(rf);
+                let mut max_v = f64::NEG_INFINITY;
+                let mut max_ij = (0usize, 0usize);
+                for (i, row) in dense.iter().enumerate() {
+                    for (j, &v) in row.iter().enumerate() {
+                        if v > max_v {
+                            max_v = v;
+                            max_ij = (i, j);
+                        }
+                    }
+                }
+                let mut max_at = surface.refined_to_coords(max_ij.0, max_ij.1, rf);
+                // fold in the raw knot grid (left-closed refinement never
+                // samples the far boundary)
+                for (i, row) in grid.iter().enumerate() {
+                    for (j, &v) in row.iter().enumerate() {
+                        if v > max_v {
+                            max_v = v;
+                            max_at = (xs[i], ys[j]);
+                        }
+                    }
+                }
+                let flat: Vec<f64> = grid.iter().flatten().copied().collect();
+                FittedSurface {
+                    surface,
+                    max_th: max_v,
+                    max_at,
+                    grid_mean: crate::util::stats::mean(&flat),
+                    grid_std: crate::util::stats::std_pop(&flat),
+                }
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// One fitted pp-slice surface with its paper §4.1 annotations.
+#[derive(Debug, Clone)]
+pub struct ThroughputSurface {
+    pub pp: u32,
+    pub load_bucket: usize,
+    /// mean true intensity of the bucket's entries (the surface's
+    /// "external load intensity information" tag)
+    pub load_intensity: f64,
+    pub fitted: FittedSurface,
+    pub confidence: ConfidenceRegion,
+    /// argmax as integer protocol parameters
+    pub optimal_params: Params,
+    pub optimal_th: f64,
+    /// observations used (diagnostics / additive updates)
+    pub n_obs: usize,
+    pub coverage: f64,
+}
+
+impl ThroughputSurface {
+    /// Predict throughput at integer parameters (pp is this slice's).
+    pub fn predict(&self, params: Params) -> f64 {
+        self.fitted.surface.eval(params.p as f64, params.cc as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn obs_from_fn<F: Fn(f64, f64) -> f64>(f: F, noise: f64, seed: u64) -> Vec<(Params, f64)> {
+        let mut rng = Rng::new(seed);
+        let mut obs = Vec::new();
+        for &p in &PARAM_GRID {
+            for &cc in &PARAM_GRID {
+                for _ in 0..3 {
+                    let th = f(p as f64, cc as f64) * (1.0 + noise * rng.normal());
+                    obs.push((Params::new(cc, p, 4), th));
+                }
+            }
+        }
+        obs
+    }
+
+    #[test]
+    fn grid_cell_means() {
+        let obs = vec![
+            (Params::new(1, 1, 4), 10.0),
+            (Params::new(1, 1, 4), 20.0),
+            (Params::new(2, 4, 4), 50.0),
+        ];
+        let g = SurfaceGrid::from_observations(&obs);
+        assert_eq!(g.values[0][0], 15.0); // p=1 (idx 0), cc=1 (idx 0)
+        // p=4 is index 2 in the lattice [1,2,4,...], cc=2 index 1
+        assert_eq!(g.values[2][1], 50.0);
+        assert_eq!(g.counts[0][0], 2);
+        assert!(g.coverage > 0.0 && g.coverage < 0.1);
+    }
+
+    #[test]
+    fn fill_completes_sparse_grids() {
+        let obs = vec![(Params::new(1, 1, 4), 100.0)];
+        let g = SurfaceGrid::from_observations(&obs);
+        assert!(g.values.iter().flatten().all(|v| v.is_finite()));
+        // the only observation should propagate everywhere
+        assert!(g.values.iter().flatten().all(|&v| (v - 100.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn empty_grid_zero_fills() {
+        let g = SurfaceGrid::from_observations(&[]);
+        assert!(g.values.iter().flatten().all(|&v| v == 0.0));
+        assert_eq!(g.coverage, 0.0);
+    }
+
+    #[test]
+    fn native_backend_finds_the_peak() {
+        // concave bump peaking near p=8, cc=8
+        let f = |p: f64, cc: f64| 1_000.0 - (p - 8.0).powi(2) * 6.0 - (cc - 8.0).powi(2) * 6.0;
+        let obs = obs_from_fn(f, 0.0, 1);
+        let grid = SurfaceGrid::from_observations(&obs);
+        let fits =
+            NativeSurfaceBackend.fit_batch(&grid.xs, &grid.ys, &[grid.values.clone()], 8);
+        assert_eq!(fits.len(), 1);
+        let fit = &fits[0];
+        assert!((fit.max_th - 1_000.0).abs() < 30.0, "max={}", fit.max_th);
+        assert!((fit.max_at.0 - 8.0).abs() < 1.5, "at p={}", fit.max_at.0);
+        assert!((fit.max_at.1 - 8.0).abs() < 1.5, "at cc={}", fit.max_at.1);
+    }
+
+    #[test]
+    fn boundary_max_is_found() {
+        // monotone increasing: max sits at the far corner (32, 32),
+        // which left-closed dense refinement alone would miss
+        let f = |p: f64, cc: f64| p * 10.0 + cc * 5.0;
+        let obs = obs_from_fn(f, 0.0, 2);
+        let grid = SurfaceGrid::from_observations(&obs);
+        let fits =
+            NativeSurfaceBackend.fit_batch(&grid.xs, &grid.ys, &[grid.values.clone()], 8);
+        let fit = &fits[0];
+        assert!((fit.max_at.0 - 32.0).abs() < 1e-9);
+        assert!((fit.max_at.1 - 32.0).abs() < 1e-9);
+        assert!((fit.max_th - 480.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_fit_handles_many_surfaces() {
+        let grids: Vec<Vec<Vec<f64>>> = (0..5)
+            .map(|k| {
+                let f = |p: f64, cc: f64| 100.0 * (k + 1) as f64 - (p - 4.0).powi(2) - cc;
+                let obs = obs_from_fn(f, 0.0, k as u64);
+                SurfaceGrid::from_observations(&obs).values
+            })
+            .collect();
+        let xs = knot_lattice();
+        let fits = NativeSurfaceBackend.fit_batch(&xs, &xs, &grids, 4);
+        assert_eq!(fits.len(), 5);
+        for w in fits.windows(2) {
+            assert!(w[1].max_th > w[0].max_th);
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! The Adaptive Sampling Module — Algorithm 1 of the paper.
+//!
+//! `QueryDB` (the [`crate::offline::SurfaceSet`]) hands us surfaces
+//! sorted by external-load intensity.  Sampling starts at the *median*
+//! bucket's precomputed optimum (line 3–6); each sample transfer's
+//! achieved throughput is tested against the surface's Gaussian
+//! confidence bound:
+//!
+//! * inside the bound → the surface represents current load: converge
+//!   and stream the rest of the dataset with its optimal parameters;
+//! * above the bound → the network is lighter than this surface's tag:
+//!   discard every bucket at or above the current intensity and bisect
+//!   into the lighter half;
+//! * below the bound → heavier: bisect into the heavier half.
+//!
+//! Each sample halves the candidate stack ("the algorithm can get rid
+//! of half the surfaces at each transfer"), so convergence takes at
+//! most ⌈log₂ η⌉ + 1 samples.
+
+use crate::offline::pipeline::SurfaceSet;
+use crate::Params;
+
+/// Where the ASM is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AsmPhase {
+    /// still bisecting the surface stack with sample transfers
+    Sampling,
+    /// converged; streaming at the selected bucket's optimum
+    Streaming,
+}
+
+/// The decision returned after each observation.
+#[derive(Debug, Clone, Copy)]
+pub struct AsmDecision {
+    pub params: Params,
+    pub phase: AsmPhase,
+    /// bucket index currently trusted
+    pub bucket: usize,
+    /// surface-predicted throughput at `params`
+    pub predicted: f64,
+}
+
+/// Algorithm-1 state over one queried surface set.
+#[derive(Debug, Clone)]
+pub struct Asm {
+    set: SurfaceSet,
+    lo: usize,
+    hi: usize,
+    current: usize,
+    phase: AsmPhase,
+    samples_used: usize,
+}
+
+impl Asm {
+    /// Start a transfer: first sample at the median-load surface.
+    pub fn new(set: SurfaceSet) -> Asm {
+        assert!(!set.buckets.is_empty(), "surface set has no buckets");
+        let hi = set.buckets.len() - 1;
+        let current = set.median_bucket();
+        Asm {
+            set,
+            lo: 0,
+            hi,
+            current,
+            phase: AsmPhase::Sampling,
+            samples_used: 0,
+        }
+    }
+
+    pub fn phase(&self) -> AsmPhase {
+        self.phase
+    }
+
+    pub fn samples_used(&self) -> usize {
+        self.samples_used
+    }
+
+    pub fn current_bucket(&self) -> usize {
+        self.current
+    }
+
+    /// Parameters for the next (sample or stream) transfer.
+    pub fn params(&self) -> Params {
+        self.set.buckets[self.current].optimal_params
+    }
+
+    /// Surface prediction at the current parameters.
+    pub fn predicted(&self) -> f64 {
+        let b = &self.set.buckets[self.current];
+        b.predict(b.optimal_params)
+    }
+
+    /// Maximum sample transfers the bisection can take.
+    pub fn max_samples(&self) -> usize {
+        (self.set.buckets.len() as f64).log2().ceil() as usize + 1
+    }
+
+    /// Feed the achieved throughput of the transfer that used
+    /// [`Asm::params`]; returns the next decision.
+    pub fn observe(&mut self, achieved: f64) -> AsmDecision {
+        let b = &self.set.buckets[self.current];
+        let predicted = b.predict(b.optimal_params);
+        let slice = b.slice_for(b.optimal_params);
+        let dev = slice.confidence.deviation_sigmas(predicted, achieved);
+        let inside = dev.abs() <= slice.confidence.z;
+
+        match self.phase {
+            AsmPhase::Sampling => {
+                self.samples_used += 1;
+                if inside || self.lo >= self.hi {
+                    // converged (or the stack is exhausted)
+                    self.phase = AsmPhase::Streaming;
+                } else if dev > 0.0 {
+                    // lighter network than this surface's load tag:
+                    // drop this bucket and everything heavier
+                    self.hi = self.current.saturating_sub(1).max(self.lo);
+                    self.current = (self.lo + self.hi) / 2;
+                    if self.lo >= self.hi {
+                        self.phase = AsmPhase::Streaming;
+                    }
+                } else {
+                    // heavier: drop this bucket and everything lighter
+                    self.lo = (self.current + 1).min(self.hi);
+                    self.current = (self.lo + self.hi + 1) / 2;
+                    if self.lo >= self.hi {
+                        self.phase = AsmPhase::Streaming;
+                    }
+                }
+            }
+            AsmPhase::Streaming => {
+                // streaming-phase re-selection is the controller's job
+                // (it filters noise first); nothing to do here.
+            }
+        }
+        self.decision()
+    }
+
+    /// Re-select the bucket whose prediction is closest to a measured
+    /// throughput (the "FindClosestSurface" of Algorithm 1, used after
+    /// a persistent deviation mid-stream).
+    pub fn reselect(&mut self, measured: f64) -> AsmDecision {
+        let mut best = (self.current, f64::INFINITY);
+        for (i, b) in self.set.buckets.iter().enumerate() {
+            let pred = b.predict(b.optimal_params);
+            let d = (pred - measured).abs();
+            if d < best.1 {
+                best = (i, d);
+            }
+        }
+        self.current = best.0;
+        // re-open the bisection window around the new bucket so a later
+        // harsh change can bisect again
+        self.lo = 0;
+        self.hi = self.set.buckets.len() - 1;
+        self.decision()
+    }
+
+    pub fn decision(&self) -> AsmDecision {
+        AsmDecision {
+            params: self.params(),
+            phase: self.phase,
+            bucket: self.current,
+            predicted: self.predicted(),
+        }
+    }
+
+    /// Confidence band (±) at the current operating point.
+    pub fn band(&self) -> f64 {
+        let b = &self.set.buckets[self.current];
+        b.slice_for(b.optimal_params).confidence.band()
+    }
+
+    pub fn set(&self) -> &SurfaceSet {
+        &self.set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::confidence::ConfidenceRegion;
+    use crate::offline::pipeline::LoadBucketSurfaces;
+    use crate::offline::spline::BicubicSurface;
+    use crate::offline::surface::{knot_lattice, FittedSurface, ThroughputSurface};
+
+    /// Synthetic surface set: bucket i predicts a flat surface at
+    /// level[i] with σ = 20 (z = 2 → band 40), optimum at (8, 8).
+    fn set_with_levels(levels: &[f64]) -> SurfaceSet {
+        let xs = knot_lattice();
+        let buckets = levels
+            .iter()
+            .enumerate()
+            .map(|(i, &lvl)| {
+                let values: Vec<Vec<f64>> = xs
+                    .iter()
+                    .map(|&p| {
+                        xs.iter()
+                            .map(|&cc| lvl - 0.5 * ((p - 8.0).abs() + (cc - 8.0).abs()))
+                            .collect()
+                    })
+                    .collect();
+                let surface = BicubicSurface::fit(&xs, &xs, &values);
+                let slice = ThroughputSurface {
+                    pp: 8,
+                    load_bucket: i,
+                    load_intensity: i as f64 / levels.len() as f64,
+                    fitted: FittedSurface {
+                        surface,
+                        max_th: lvl,
+                        max_at: (8.0, 8.0),
+                        grid_mean: lvl,
+                        grid_std: 1.0,
+                    },
+                    confidence: ConfidenceRegion { sigma: 20.0, z: 2.0 },
+                    optimal_params: Params::new(8, 8, 8),
+                    optimal_th: lvl,
+                    n_obs: 64,
+                    coverage: 1.0,
+                };
+                LoadBucketSurfaces {
+                    bucket: i,
+                    load_intensity: i as f64 / levels.len() as f64,
+                    true_intensity: i as f64 / levels.len() as f64,
+                    slices: vec![slice],
+                    optimal_params: Params::new(8, 8, 8),
+                    optimal_th: lvl,
+                }
+            })
+            .collect();
+        SurfaceSet {
+            cluster: 0,
+            class: crate::sim::dataset::FileSizeClass::Large,
+            buckets,
+            sampling: vec![],
+        }
+    }
+
+    /// Buckets sorted by load ascending: lightest has the highest level.
+    fn five_levels() -> Vec<f64> {
+        vec![1000.0, 800.0, 600.0, 400.0, 200.0]
+    }
+
+    #[test]
+    fn starts_at_median_bucket() {
+        let asm = Asm::new(set_with_levels(&five_levels()));
+        assert_eq!(asm.current_bucket(), 2);
+        assert_eq!(asm.params(), Params::new(8, 8, 8));
+        assert_eq!(asm.phase(), AsmPhase::Sampling);
+    }
+
+    #[test]
+    fn converges_immediately_when_inside_bound() {
+        let mut asm = Asm::new(set_with_levels(&five_levels()));
+        // median predicts 600; achieved 590 is inside ±40
+        let d = asm.observe(590.0);
+        assert_eq!(d.phase, AsmPhase::Streaming);
+        assert_eq!(asm.samples_used(), 1);
+        assert_eq!(d.bucket, 2);
+    }
+
+    #[test]
+    fn bisects_to_lightest_when_network_is_idle() {
+        let mut asm = Asm::new(set_with_levels(&five_levels()));
+        // network actually supports ~1000 (lightest bucket)
+        let mut d = asm.decision();
+        for _ in 0..asm.max_samples() {
+            if d.phase == AsmPhase::Streaming {
+                break;
+            }
+            d = asm.observe(1000.0);
+        }
+        assert_eq!(d.phase, AsmPhase::Streaming);
+        assert_eq!(d.bucket, 0, "should land on the lightest bucket");
+        assert!(asm.samples_used() <= asm.max_samples());
+    }
+
+    #[test]
+    fn bisects_to_heaviest_under_load() {
+        let mut asm = Asm::new(set_with_levels(&five_levels()));
+        let mut d = asm.decision();
+        for _ in 0..asm.max_samples() {
+            if d.phase == AsmPhase::Streaming {
+                break;
+            }
+            d = asm.observe(200.0);
+        }
+        assert_eq!(d.bucket, 4, "should land on the heaviest bucket");
+    }
+
+    #[test]
+    fn lands_on_intermediate_bucket() {
+        let mut asm = Asm::new(set_with_levels(&five_levels()));
+        // true level ~800 = bucket 1
+        let mut d = asm.decision();
+        for _ in 0..asm.max_samples() {
+            if d.phase == AsmPhase::Streaming {
+                break;
+            }
+            d = asm.observe(800.0);
+        }
+        assert_eq!(d.bucket, 1);
+    }
+
+    #[test]
+    fn sample_budget_is_logarithmic() {
+        for n in [1usize, 2, 3, 5, 8, 16] {
+            let levels: Vec<f64> = (0..n).map(|i| 1000.0 - 100.0 * i as f64).collect();
+            let mut asm = Asm::new(set_with_levels(&levels));
+            let budget = asm.max_samples();
+            assert!(budget <= (n as f64).log2().ceil() as usize + 1);
+            // drive to convergence with an extreme observation
+            let mut steps = 0;
+            while asm.phase() == AsmPhase::Sampling && steps < 20 {
+                asm.observe(1.0);
+                steps += 1;
+            }
+            assert!(
+                asm.samples_used() <= budget,
+                "n={n}: used {} > budget {budget}",
+                asm.samples_used()
+            );
+        }
+    }
+
+    #[test]
+    fn reselect_finds_closest_surface() {
+        let mut asm = Asm::new(set_with_levels(&five_levels()));
+        asm.observe(590.0); // converge at bucket 2
+        let d = asm.reselect(410.0);
+        assert_eq!(d.bucket, 3, "400-level bucket is closest to 410");
+        let d2 = asm.reselect(990.0);
+        assert_eq!(d2.bucket, 0);
+    }
+
+    #[test]
+    fn single_bucket_set_converges_in_one() {
+        let mut asm = Asm::new(set_with_levels(&[500.0]));
+        let d = asm.observe(123.0); // wildly off, but nowhere to go
+        assert_eq!(d.phase, AsmPhase::Streaming);
+        assert_eq!(d.bucket, 0);
+    }
+}

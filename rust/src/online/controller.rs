@@ -1,0 +1,248 @@
+//! The transfer-lifetime controller: ASM sampling → streaming with
+//! EWMA monitoring → re-selection on persistent deviation (§4.2's
+//! "whenever it detects persistent change in network condition and
+//! external traffic load, it asks offline optimization module for new
+//! parameters").
+//!
+//! The controller is the deployable unit: it implements
+//! [`crate::sim::multiuser::UserPolicy`] and plugs directly into
+//! `SimEnv::run_transfer` closures and the coordinator's orchestrator.
+
+use crate::offline::pipeline::SurfaceSet;
+use crate::online::asm::{Asm, AsmPhase};
+use crate::online::monitor::DeviationMonitor;
+use crate::sim::multiuser::{UserCtx, UserPolicy};
+use crate::Params;
+
+/// Tuning knobs for the streaming-phase monitor.
+#[derive(Debug, Clone)]
+pub struct TunerConfig {
+    pub ewma_alpha: f64,
+    /// consecutive out-of-band smoothed samples before re-tuning
+    pub deviation_streak: usize,
+    /// widen the surface band by this factor during streaming (chunk
+    /// measurements are noisier than dedicated sample transfers)
+    pub band_slack: f64,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            ewma_alpha: 0.4,
+            deviation_streak: 3,
+            band_slack: 1.5,
+        }
+    }
+}
+
+/// Full online controller for one transfer.
+#[derive(Debug, Clone)]
+pub struct DynamicTuner {
+    asm: Asm,
+    monitor: DeviationMonitor,
+    cfg: TunerConfig,
+    /// how many times the streaming phase re-tuned
+    pub retunes: usize,
+}
+
+impl DynamicTuner {
+    pub fn new(set: SurfaceSet, cfg: TunerConfig) -> DynamicTuner {
+        let monitor = DeviationMonitor::new(cfg.ewma_alpha, cfg.deviation_streak);
+        DynamicTuner {
+            asm: Asm::new(set),
+            monitor,
+            cfg,
+            retunes: 0,
+        }
+    }
+
+    pub fn with_defaults(set: SurfaceSet) -> DynamicTuner {
+        DynamicTuner::new(set, TunerConfig::default())
+    }
+
+    /// Parameters for the next chunk.
+    pub fn params(&self) -> Params {
+        self.asm.params()
+    }
+
+    pub fn phase(&self) -> AsmPhase {
+        self.asm.phase()
+    }
+
+    pub fn samples_used(&self) -> usize {
+        self.asm.samples_used()
+    }
+
+    /// Surface-predicted throughput at the operating point.
+    pub fn predicted(&self) -> f64 {
+        self.asm.predicted()
+    }
+
+    /// Feed the measured throughput of the chunk transferred with
+    /// [`DynamicTuner::params`]; returns the parameters for the next
+    /// chunk.
+    pub fn observe(&mut self, measured: f64) -> Params {
+        match self.asm.phase() {
+            AsmPhase::Sampling => {
+                let d = self.asm.observe(measured);
+                if d.phase == AsmPhase::Streaming {
+                    self.monitor.reset();
+                }
+                d.params
+            }
+            AsmPhase::Streaming => {
+                let predicted = self.asm.predicted();
+                let band = self.asm.band() * self.cfg.band_slack;
+                if self.monitor.observe(predicted, band, measured) {
+                    let recent = self.monitor.smoothed().unwrap_or(measured);
+                    let d = self.asm.reselect(recent);
+                    self.monitor.reset();
+                    self.retunes += 1;
+                    d.params
+                } else {
+                    self.asm.params()
+                }
+            }
+        }
+    }
+
+    pub fn asm(&self) -> &Asm {
+        &self.asm
+    }
+}
+
+impl UserPolicy for DynamicTuner {
+    fn decide(&mut self, ctx: &UserCtx) -> Params {
+        match ctx.last_throughput {
+            None => self.params(),
+            Some(th) => self.observe(th),
+        }
+    }
+
+    fn name(&self) -> &str {
+        "ASM"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::confidence::ConfidenceRegion;
+    use crate::offline::pipeline::LoadBucketSurfaces;
+    use crate::offline::spline::BicubicSurface;
+    use crate::offline::surface::{knot_lattice, FittedSurface, ThroughputSurface};
+
+    fn set_with_levels(levels: &[f64]) -> SurfaceSet {
+        let xs = knot_lattice();
+        let buckets = levels
+            .iter()
+            .enumerate()
+            .map(|(i, &lvl)| {
+                let values: Vec<Vec<f64>> =
+                    xs.iter().map(|_| xs.iter().map(|_| lvl).collect()).collect();
+                let surface = BicubicSurface::fit(&xs, &xs, &values);
+                let slice = ThroughputSurface {
+                    pp: 8,
+                    load_bucket: i,
+                    load_intensity: i as f64 / levels.len() as f64,
+                    fitted: FittedSurface {
+                        surface,
+                        max_th: lvl,
+                        max_at: (8.0, 8.0),
+                        grid_mean: lvl,
+                        grid_std: 1.0,
+                    },
+                    confidence: ConfidenceRegion { sigma: 20.0, z: 2.0 },
+                    optimal_params: Params::new(8, 8, 8),
+                    optimal_th: lvl,
+                    n_obs: 64,
+                    coverage: 1.0,
+                };
+                LoadBucketSurfaces {
+                    bucket: i,
+                    load_intensity: i as f64 / levels.len() as f64,
+                    true_intensity: i as f64 / levels.len() as f64,
+                    slices: vec![slice],
+                    optimal_params: Params::new(8, 8, 8),
+                    optimal_th: lvl,
+                }
+            })
+            .collect();
+        SurfaceSet {
+            cluster: 0,
+            class: crate::sim::dataset::FileSizeClass::Large,
+            buckets,
+            sampling: vec![],
+        }
+    }
+
+    #[test]
+    fn samples_then_streams() {
+        let mut t = DynamicTuner::with_defaults(set_with_levels(&[1000.0, 600.0, 200.0]));
+        assert_eq!(t.phase(), AsmPhase::Sampling);
+        t.observe(600.0); // inside median band
+        assert_eq!(t.phase(), AsmPhase::Streaming);
+        assert_eq!(t.samples_used(), 1);
+    }
+
+    #[test]
+    fn noise_does_not_retune() {
+        let mut t = DynamicTuner::with_defaults(set_with_levels(&[1000.0, 600.0, 200.0]));
+        t.observe(600.0);
+        for _ in 0..50 {
+            t.observe(600.0 + if t.retunes == 0 { 25.0 } else { 0.0 });
+        }
+        assert_eq!(t.retunes, 0);
+    }
+
+    #[test]
+    fn sustained_load_change_retunes_to_matching_surface() {
+        let mut t = DynamicTuner::with_defaults(set_with_levels(&[1000.0, 600.0, 200.0]));
+        t.observe(600.0); // converge on the middle bucket
+        assert_eq!(t.asm().current_bucket(), 1);
+        // heavy external load arrives: measured drops to ~200
+        for _ in 0..10 {
+            t.observe(200.0);
+        }
+        assert!(t.retunes >= 1, "should have re-tuned");
+        assert_eq!(t.asm().current_bucket(), 2);
+    }
+
+    #[test]
+    fn recovery_after_congestion_clears() {
+        let mut t = DynamicTuner::with_defaults(set_with_levels(&[1000.0, 600.0, 200.0]));
+        t.observe(600.0);
+        for _ in 0..10 {
+            t.observe(200.0); // congestion
+        }
+        assert_eq!(t.asm().current_bucket(), 2);
+        for _ in 0..10 {
+            t.observe(980.0); // congestion cleared, link near-idle
+        }
+        assert_eq!(t.asm().current_bucket(), 0, "should climb back up");
+        assert!(t.retunes >= 2);
+    }
+
+    #[test]
+    fn user_policy_interface() {
+        let mut t = DynamicTuner::with_defaults(set_with_levels(&[1000.0, 600.0, 200.0]));
+        let first = t.decide(&UserCtx {
+            user_id: 0,
+            t_s: 0.0,
+            last_throughput: None,
+            current_params: Params::DEFAULT,
+            decision_idx: 0,
+        });
+        assert_eq!(first, Params::new(8, 8, 8));
+        let next = t.decide(&UserCtx {
+            user_id: 0,
+            t_s: 20.0,
+            last_throughput: Some(600.0),
+            current_params: first,
+            decision_idx: 1,
+        });
+        assert_eq!(next, Params::new(8, 8, 8));
+        assert_eq!(t.phase(), AsmPhase::Streaming);
+        assert_eq!(UserPolicy::name(&t), "ASM");
+    }
+}

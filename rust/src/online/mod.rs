@@ -1,0 +1,19 @@
+//! The online phase (§4.2): dynamic control during a live transfer.
+//!
+//! * [`asm`] — the Adaptive Sampling Module (Algorithm 1): start from
+//!   the median-load surface's precomputed optimum, then bisect the
+//!   load-sorted surface stack on confidence-bound violations ("the
+//!   algorithm can get rid of half the surfaces at each transfer");
+//! * [`monitor`] — EWMA persistent-deviation detector that separates
+//!   harsh external-load changes from sampling noise;
+//! * [`controller`] — the full transfer-lifetime state machine gluing
+//!   the two together (sampling → streaming → re-tuning), pluggable
+//!   into both the single-job engine and the multi-user simulator.
+
+pub mod asm;
+pub mod controller;
+pub mod monitor;
+
+pub use asm::{Asm, AsmDecision, AsmPhase};
+pub use controller::DynamicTuner;
+pub use monitor::DeviationMonitor;

@@ -1,0 +1,113 @@
+//! Persistent-deviation detection for the streaming phase.
+//!
+//! A single out-of-confidence chunk is probably noise; the paper reacts
+//! only to "persistent change in network condition and external traffic
+//! load".  We smooth measurements with an EWMA and require `streak`
+//! consecutive out-of-band smoothed values before declaring a change.
+
+use crate::util::stats::Ewma;
+
+#[derive(Debug, Clone)]
+pub struct DeviationMonitor {
+    ewma: Ewma,
+    out_streak: usize,
+    /// consecutive out-of-band observations required
+    streak: usize,
+}
+
+impl DeviationMonitor {
+    pub fn new(alpha: f64, streak: usize) -> DeviationMonitor {
+        DeviationMonitor {
+            ewma: Ewma::new(alpha),
+            out_streak: 0,
+            streak: streak.max(1),
+        }
+    }
+
+    /// Feed one measurement against the surface prediction ± band.
+    /// Returns true when the deviation is persistent.
+    pub fn observe(&mut self, predicted: f64, band: f64, measured: f64) -> bool {
+        let smoothed = self.ewma.update(measured);
+        if (smoothed - predicted).abs() > band {
+            self.out_streak += 1;
+        } else {
+            self.out_streak = 0;
+        }
+        self.out_streak >= self.streak
+    }
+
+    /// The smoothed throughput estimate (for surface re-selection).
+    pub fn smoothed(&self) -> Option<f64> {
+        self.ewma.value()
+    }
+
+    /// Reset after a re-tune (new surface, new band).
+    pub fn reset(&mut self) {
+        self.ewma.reset();
+        self.out_streak = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_outlier_does_not_trigger() {
+        // a lone spike pushes the EWMA out once, but good samples pull
+        // it back inside the band before the streak completes
+        let mut m = DeviationMonitor::new(0.5, 3);
+        assert!(!m.observe(100.0, 60.0, 100.0));
+        assert!(!m.observe(100.0, 60.0, 300.0)); // spike: smoothed 200
+        assert!(!m.observe(100.0, 60.0, 100.0)); // smoothed 150, back in
+        assert!(!m.observe(100.0, 60.0, 100.0));
+        assert!(!m.observe(100.0, 60.0, 100.0));
+    }
+
+    #[test]
+    fn sustained_shift_triggers_after_streak() {
+        let mut m = DeviationMonitor::new(0.6, 3);
+        m.observe(100.0, 10.0, 100.0);
+        let mut fired = 0;
+        for i in 0..6 {
+            if m.observe(100.0, 10.0, 200.0) {
+                fired = i + 1;
+                break;
+            }
+        }
+        assert!(
+            (3..=4).contains(&fired),
+            "should fire after ~3 sustained deviations, got {fired}"
+        );
+    }
+
+    #[test]
+    fn noise_within_band_never_triggers() {
+        let mut rng = Rng::new(2);
+        let mut m = DeviationMonitor::new(0.3, 3);
+        for _ in 0..500 {
+            let v = rng.normal_ms(100.0, 3.0);
+            assert!(!m.observe(100.0, 15.0, v));
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut m = DeviationMonitor::new(0.6, 2);
+        m.observe(100.0, 5.0, 200.0);
+        m.observe(100.0, 5.0, 200.0);
+        m.reset();
+        assert!(m.smoothed().is_none());
+        assert!(!m.observe(100.0, 5.0, 100.0));
+    }
+
+    #[test]
+    fn smoothed_tracks_mean() {
+        let mut m = DeviationMonitor::new(0.4, 3);
+        for _ in 0..50 {
+            m.observe(100.0, 50.0, 140.0);
+        }
+        assert!((m.smoothed().unwrap() - 140.0).abs() < 1.0);
+    }
+}

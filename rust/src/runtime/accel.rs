@@ -1,0 +1,332 @@
+//! PJRT-accelerated offline backends: the AOT-compiled JAX/Pallas
+//! pipeline behind the same traits the native math implements.
+//!
+//! * [`PjrtSurfaceBackend`] — batched bicubic fit + dense refinement +
+//!   stats through the `surface_pipeline` artifact (L2 graph calling
+//!   the L1 Pallas kernel);
+//! * [`PjrtKmeans`] — Lloyd assignment through the `kmeans_step`
+//!   artifact (Pallas pairwise-distance kernel); the trivial centroid
+//!   arithmetic is redone natively so arbitrary N (the artifact shape
+//!   is fixed at 2048×8) can be chunked without bias.
+//!
+//! Both pad to the manifest's static shapes and are parity-tested
+//! against the native backends in `rust/tests/integration_runtime.rs`.
+
+use crate::offline::features::N_FEATURES;
+use crate::offline::kmeans::KmeansBackend;
+use crate::offline::spline::BicubicSurface;
+use crate::offline::surface::{FittedSurface, NativeSurfaceBackend, SurfaceBackend};
+use crate::runtime::engine::Engine;
+use crate::util::stats;
+
+/// Surface backend running the `surface_pipeline` artifact.
+pub struct PjrtSurfaceBackend {
+    pub engine: Engine,
+}
+
+impl PjrtSurfaceBackend {
+    pub fn new(engine: Engine) -> PjrtSurfaceBackend {
+        PjrtSurfaceBackend { engine }
+    }
+
+    fn consts(&self) -> (usize, usize, usize, usize) {
+        let m = &self.engine.manifest;
+        (
+            m.konst("S").unwrap_or(16),
+            m.konst("GP").unwrap_or(8),
+            m.konst("GC").unwrap_or(8),
+            m.konst("RF").unwrap_or(8),
+        )
+    }
+}
+
+impl SurfaceBackend for PjrtSurfaceBackend {
+    fn fit_batch(
+        &self,
+        xs: &[f64],
+        ys: &[f64],
+        values: &[Vec<Vec<f64>>],
+        rf: usize,
+    ) -> Vec<FittedSurface> {
+        let (s_max, gp, gc, rf_art) = self.consts();
+        // shape family mismatch -> native fallback (correctness first)
+        if xs.len() != gp || ys.len() != gc || rf != rf_art || values.is_empty() {
+            return NativeSurfaceBackend.fit_batch(xs, ys, values, rf);
+        }
+
+        let xs32: Vec<f32> = xs.iter().map(|&v| v as f32).collect();
+        let ys32: Vec<f32> = ys.iter().map(|&v| v as f32).collect();
+
+        let mut out = Vec::with_capacity(values.len());
+        for chunk in values.chunks(s_max) {
+            // pad the batch by repeating the first grid
+            let mut flat = Vec::with_capacity(s_max * gp * gc);
+            for grid in chunk.iter().chain(std::iter::repeat(&chunk[0])).take(s_max) {
+                for row in grid {
+                    for &v in row {
+                        flat.push(v as f32);
+                    }
+                }
+            }
+            let res = match self.engine.surface_pipeline(&xs32, &ys32, &flat) {
+                Ok(r) => r,
+                Err(err) => {
+                    eprintln!("warning: surface_pipeline failed ({err:#}); native fallback");
+                    return NativeSurfaceBackend.fit_batch(xs, ys, values, rf);
+                }
+            };
+            let stride_c = (gp - 1) * (gc - 1) * 16;
+            let dw = (gc - 1) * rf; // dense width
+            let stride_d = (gp - 1) * rf * dw;
+            for (si, grid) in chunk.iter().enumerate() {
+                // rebuild the surface from the artifact's coefficients
+                let cslice = &res.coeffs[si * stride_c..(si + 1) * stride_c];
+                let mut coeffs = vec![vec![[0.0f64; 16]; gc - 1]; gp - 1];
+                for i in 0..gp - 1 {
+                    for j in 0..gc - 1 {
+                        for k in 0..16 {
+                            coeffs[i][j][k] =
+                                cslice[(i * (gc - 1) + j) * 16 + k] as f64;
+                        }
+                    }
+                }
+                let surface = BicubicSurface {
+                    xs: xs.to_vec(),
+                    ys: ys.to_vec(),
+                    coeffs,
+                };
+                // argmax: dense winner, folded with the knot grid (same
+                // logic as the native backend)
+                let mut max_v = res.maxv[si] as f64;
+                let (ai, aj) = (
+                    res.argmax[si * 2] as usize,
+                    res.argmax[si * 2 + 1] as usize,
+                );
+                let dense_max = res.dense[si * stride_d + ai * dw + aj] as f64;
+                let mut max_at = surface.refined_to_coords(ai, aj, rf);
+                if max_v > dense_max + 1e-9 {
+                    // a knot value beat the refinement: locate it
+                    for (i, row) in grid.iter().enumerate() {
+                        for (j, &v) in row.iter().enumerate() {
+                            if v >= max_v - 1e-6 {
+                                max_at = (xs[i], ys[j]);
+                                max_v = max_v.max(v);
+                            }
+                        }
+                    }
+                }
+                out.push(FittedSurface {
+                    surface,
+                    max_th: max_v,
+                    max_at,
+                    grid_mean: res.mean[si] as f64,
+                    grid_std: res.std[si] as f64,
+                });
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// K-means backend running the `kmeans_step` artifact for assignment.
+pub struct PjrtKmeans {
+    pub engine: Engine,
+}
+
+impl PjrtKmeans {
+    pub fn new(engine: Engine) -> PjrtKmeans {
+        PjrtKmeans { engine }
+    }
+}
+
+impl KmeansBackend for PjrtKmeans {
+    fn step(
+        &self,
+        points: &[[f64; N_FEATURES]],
+        centroids: &[[f64; N_FEATURES]],
+    ) -> (Vec<[f64; N_FEATURES]>, Vec<usize>, f64) {
+        let m = &self.engine.manifest;
+        let (n_art, d_art, k_art) = (
+            m.konst("N").unwrap_or(2048),
+            m.konst("D").unwrap_or(8),
+            m.konst("K").unwrap_or(16),
+        );
+        let k = centroids.len();
+        if k > k_art || N_FEATURES > d_art || points.is_empty() {
+            return crate::offline::kmeans::NativeKmeans.step(points, centroids);
+        }
+
+        // pad centroids: unused slots parked far away so no point
+        // chooses them
+        let mut c32 = vec![0.0f32; k_art * d_art];
+        for (ki, c) in centroids.iter().enumerate() {
+            for f in 0..N_FEATURES {
+                c32[ki * d_art + f] = c[f] as f32;
+            }
+        }
+        for ki in k..k_art {
+            c32[ki * d_art] = 1e9;
+        }
+
+        let mut assignment = vec![0usize; points.len()];
+        for (ci, chunk) in points.chunks(n_art).enumerate() {
+            // pad the tail chunk by repeating the first point; padded
+            // assignments are discarded
+            let mut x32 = vec![0.0f32; n_art * d_art];
+            for (pi, p) in chunk
+                .iter()
+                .chain(std::iter::repeat(&chunk[0]))
+                .take(n_art)
+                .enumerate()
+            {
+                for f in 0..N_FEATURES {
+                    x32[pi * d_art + f] = p[f] as f32;
+                }
+            }
+            match self.engine.kmeans_step(&x32, &c32) {
+                Ok(res) => {
+                    for (pi, _) in chunk.iter().enumerate() {
+                        assignment[ci * n_art + pi] = res.assign[pi] as usize;
+                    }
+                }
+                Err(err) => {
+                    eprintln!("warning: kmeans_step failed ({err:#}); native fallback");
+                    return crate::offline::kmeans::NativeKmeans.step(points, centroids);
+                }
+            }
+        }
+
+        // centroid update + inertia natively (exact, unbiased by padding)
+        let mut sums = vec![[0.0; N_FEATURES]; k];
+        let mut counts = vec![0usize; k];
+        let mut inertia = 0.0;
+        for (p, &a) in points.iter().zip(&assignment) {
+            let a = a.min(k - 1);
+            counts[a] += 1;
+            let mut d2 = 0.0;
+            for f in 0..N_FEATURES {
+                sums[a][f] += p[f];
+                let d = p[f] - centroids[a][f];
+                d2 += d * d;
+            }
+            inertia += d2;
+        }
+        let new_centroids: Vec<[f64; N_FEATURES]> = (0..k)
+            .map(|ki| {
+                if counts[ki] == 0 {
+                    centroids[ki]
+                } else {
+                    let mut c = [0.0; N_FEATURES];
+                    for f in 0..N_FEATURES {
+                        c[f] = sums[ki][f] / counts[ki] as f64;
+                    }
+                    c
+                }
+            })
+            .collect();
+        (new_centroids, assignment, inertia)
+    }
+}
+
+/// Quick sanity statistic used by perf logging: mean |a-b| over slices.
+pub fn mean_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| (x - y).abs()).collect();
+    stats::mean(&diffs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::surface::knot_lattice;
+    use crate::util::rng::Rng;
+
+    fn pjrt_surface() -> Option<PjrtSurfaceBackend> {
+        Engine::try_default().map(PjrtSurfaceBackend::new)
+    }
+
+    #[test]
+    fn pjrt_surface_matches_native() {
+        let Some(backend) = pjrt_surface() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let xs = knot_lattice();
+        let mut rng = Rng::new(3);
+        let grids: Vec<Vec<Vec<f64>>> = (0..3)
+            .map(|_| {
+                (0..xs.len())
+                    .map(|_| (0..xs.len()).map(|_| rng.uniform(50.0, 1_000.0)).collect())
+                    .collect()
+            })
+            .collect();
+        let pjrt = backend.fit_batch(&xs, &xs, &grids, 8);
+        let native = NativeSurfaceBackend.fit_batch(&xs, &xs, &grids, 8);
+        assert_eq!(pjrt.len(), native.len());
+        for (p, n) in pjrt.iter().zip(&native) {
+            // f32 artifact vs f64 native: allow small drift
+            assert!(
+                (p.max_th - n.max_th).abs() / n.max_th < 1e-3,
+                "max {} vs {}",
+                p.max_th,
+                n.max_th
+            );
+            assert!((p.grid_mean - n.grid_mean).abs() / n.grid_mean < 1e-4);
+            // surfaces agree pointwise
+            for pq in [1.5f64, 4.0, 11.0, 27.0] {
+                for cq in [1.0f64, 6.5, 19.0, 32.0] {
+                    let a = p.surface.eval(pq, cq);
+                    let b = n.surface.eval(pq, cq);
+                    assert!(
+                        (a - b).abs() < 1e-2 * b.abs().max(1.0),
+                        "eval({pq},{cq}): {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_kmeans_matches_native() {
+        let Some(e) = Engine::try_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let backend = PjrtKmeans::new(e);
+        let mut rng = Rng::new(4);
+        let mut points = Vec::new();
+        for c in [[0.0; N_FEATURES], [8.0; N_FEATURES]] {
+            for _ in 0..700 {
+                let mut p = c;
+                for f in p.iter_mut() {
+                    *f += rng.normal() * 0.3;
+                }
+                points.push(p);
+            }
+        }
+        let centroids = vec![[0.5; N_FEATURES], [7.5; N_FEATURES]];
+        let (pc, pa, pi) = backend.step(&points, &centroids);
+        let (nc, na, ni) =
+            crate::offline::kmeans::NativeKmeans.step(&points, &centroids);
+        assert_eq!(pa, na);
+        assert!((pi - ni).abs() / ni < 1e-6);
+        for (a, b) in pc.iter().zip(&nc) {
+            for f in 0..N_FEATURES {
+                assert!((a[f] - b[f]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_abs_diff_basics() {
+        assert_eq!(mean_abs_diff(&[], &[]), 0.0);
+        assert!((mean_abs_diff(&[1.0, 2.0], &[2.0, 0.0]) - 1.5).abs() < 1e-12);
+    }
+}

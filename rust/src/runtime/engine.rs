@@ -1,0 +1,266 @@
+//! The PJRT engine: load HLO-text artifacts, compile once, execute many.
+//!
+//! Follows the /opt/xla-example pattern: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Every artifact was lowered with `return_tuple=True`, so outputs come
+//! back as one tuple literal that we decompose.
+
+use crate::runtime::manifest::Manifest;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Outputs of the `surface_pipeline` artifact (all row-major f32).
+#[derive(Debug, Clone)]
+pub struct SurfacePipelineOut {
+    /// [S, GP-1, GC-1, 16]
+    pub coeffs: Vec<f32>,
+    /// [S, (GP-1)*RF, (GC-1)*RF]
+    pub dense: Vec<f32>,
+    /// [S]
+    pub maxv: Vec<f32>,
+    /// [S, 2] refined-grid argmax (i, j) as f32
+    pub argmax: Vec<f32>,
+    /// [S]
+    pub mean: Vec<f32>,
+    /// [S]
+    pub std: Vec<f32>,
+}
+
+/// Outputs of the `kmeans_step` artifact.
+#[derive(Debug, Clone)]
+pub struct KmeansStepOut {
+    /// [K, D]
+    pub new_centroids: Vec<f32>,
+    /// [N] assignment as f32
+    pub assign: Vec<f32>,
+    pub inertia: f32,
+}
+
+/// Compiled-artifact registry over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = BTreeMap::new();
+        for (name, meta) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.file
+                    .to_str()
+                    .context("artifact path is not valid UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text for {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            executables,
+        })
+    }
+
+    /// Load from the default artifact directory; None when artifacts
+    /// have not been built (callers fall back to native math).
+    pub fn try_default() -> Option<Engine> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        match Engine::load(&dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("warning: PJRT engine unavailable ({err:#}); using native math");
+                None
+            }
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact {name} not compiled"))?;
+        let meta = self.manifest.artifact(name)?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (lit, shape)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            let expect: usize = shape.iter().product();
+            if lit.element_count() != expect {
+                bail!(
+                    "{name}: input {i} has {} elements, manifest wants {:?}",
+                    lit.element_count(),
+                    shape
+                );
+            }
+        }
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple().context("decomposing output tuple")?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest wants {}",
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// Run the fused fit + dense-refine + stats pipeline on a batch of
+    /// S value grids sharing knots.
+    pub fn surface_pipeline(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        values: &[f32],
+    ) -> Result<SurfacePipelineOut> {
+        let meta = self.manifest.artifact("surface_pipeline")?;
+        let (gp, gc) = (meta.inputs[0][0], meta.inputs[1][0]);
+        let s = meta.inputs[2][0];
+        let inputs = [
+            Self::lit_f32(xs, &[gp])?,
+            Self::lit_f32(ys, &[gc])?,
+            Self::lit_f32(values, &[s, gp, gc])?,
+        ];
+        let parts = self.run("surface_pipeline", &inputs)?;
+        Ok(SurfacePipelineOut {
+            coeffs: parts[0].to_vec::<f32>()?,
+            dense: parts[1].to_vec::<f32>()?,
+            maxv: parts[2].to_vec::<f32>()?,
+            argmax: parts[3].to_vec::<f32>()?,
+            mean: parts[4].to_vec::<f32>()?,
+            std: parts[5].to_vec::<f32>()?,
+        })
+    }
+
+    /// One Lloyd iteration over padded [N, D] points and [K, D]
+    /// centroids.
+    pub fn kmeans_step(&self, x: &[f32], c: &[f32]) -> Result<KmeansStepOut> {
+        let meta = self.manifest.artifact("kmeans_step")?;
+        let (n, d) = (meta.inputs[0][0], meta.inputs[0][1]);
+        let k = meta.inputs[1][0];
+        let inputs = [Self::lit_f32(x, &[n, d])?, Self::lit_f32(c, &[k, d])?];
+        let parts = self.run("kmeans_step", &inputs)?;
+        Ok(KmeansStepOut {
+            new_centroids: parts[0].to_vec::<f32>()?,
+            assign: parts[1].to_vec::<f32>()?,
+            inertia: parts[2].to_vec::<f32>()?[0],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests exercise the real artifacts when `make artifacts`
+    /// has run; they are skipped (not failed) otherwise so `cargo test`
+    /// works from a clean checkout.
+    fn engine() -> Option<Engine> {
+        Engine::try_default()
+    }
+
+    #[test]
+    fn loads_and_compiles_all_artifacts() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(e.platform(), "cpu");
+        assert!(e.executables.len() >= 3);
+    }
+
+    #[test]
+    fn surface_pipeline_shapes() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = &e.manifest;
+        let (s, gp, gc, rf) = (
+            m.konst("S").unwrap(),
+            m.konst("GP").unwrap(),
+            m.konst("GC").unwrap(),
+            m.konst("RF").unwrap(),
+        );
+        let xs: Vec<f32> = (0..gp).map(|i| (i + 1) as f32).collect();
+        let ys: Vec<f32> = (0..gc).map(|i| (i + 1) as f32).collect();
+        let values: Vec<f32> = (0..s * gp * gc).map(|i| (i % 97) as f32).collect();
+        let out = e.surface_pipeline(&xs, &ys, &values).unwrap();
+        assert_eq!(out.coeffs.len(), s * (gp - 1) * (gc - 1) * 16);
+        assert_eq!(out.dense.len(), s * (gp - 1) * rf * (gc - 1) * rf);
+        assert_eq!(out.maxv.len(), s);
+        assert_eq!(out.argmax.len(), s * 2);
+        assert_eq!(out.mean.len(), s);
+        assert_eq!(out.std.len(), s);
+    }
+
+    #[test]
+    fn input_shape_mismatch_is_error() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let bad = e.surface_pipeline(&[1.0; 3], &[1.0; 8], &[0.0; 16 * 8 * 8]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn kmeans_step_assigns_to_nearest() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = &e.manifest;
+        let (n, d, k) = (
+            m.konst("N").unwrap(),
+            m.konst("D").unwrap(),
+            m.konst("K").unwrap(),
+        );
+        // half the points at 0, half at 10 (first feature)
+        let mut x = vec![0.0f32; n * d];
+        for i in n / 2..n {
+            x[i * d] = 10.0;
+        }
+        let mut c = vec![0.0f32; k * d];
+        c[0] = 1.0; // centroid 0 near the zeros
+        c[d] = 9.0; // centroid 1 near the tens
+        for kk in 2..k {
+            c[kk * d] = 1e6; // park the rest far away
+        }
+        let out = e.kmeans_step(&x, &c).unwrap();
+        assert!(out.assign[..n / 2].iter().all(|&a| a == 0.0));
+        assert!(out.assign[n / 2..].iter().all(|&a| a == 1.0));
+        // updated centroids move onto the data
+        assert!((out.new_centroids[0] - 0.0).abs() < 1e-4);
+        assert!((out.new_centroids[d] - 10.0).abs() < 1e-4);
+        assert!(out.inertia > 0.0);
+    }
+}

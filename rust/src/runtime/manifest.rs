@@ -1,0 +1,157 @@
+//! `artifacts/manifest.json` parsing: artifact names, files and the
+//! static shape family the AOT path fixed (S, GP, GC, RF, N, D, K).
+
+use crate::util::json::Value;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub consts: BTreeMap<String, usize>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn shape_list(v: &Value) -> Result<Vec<Vec<usize>>> {
+    let arr = v.as_arr().context("expected shape list")?;
+    arr.iter()
+        .map(|s| {
+            s.as_arr()
+                .context("expected shape")?
+                .iter()
+                .map(|d| d.as_u64().map(|x| x as usize).context("bad dim"))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+        if v.get("format").as_str() != Some("hlo-text") {
+            bail!("unsupported artifact format {:?}", v.get("format"));
+        }
+        let mut consts = BTreeMap::new();
+        for (k, val) in v.get("consts").as_obj().context("consts")? {
+            consts.insert(
+                k.clone(),
+                val.as_u64().context("const must be integer")? as usize,
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in v.get("artifacts").as_obj().context("artifacts")? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(meta.get("file").as_str().context("file")?),
+                    inputs: shape_list(meta.get("inputs"))?,
+                    outputs: shape_list(meta.get("outputs"))?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            consts,
+            artifacts,
+        })
+    }
+
+    /// Default artifact dir: `$TWOPHASE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TWOPHASE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn konst(&self, name: &str) -> Result<usize> {
+        self.consts
+            .get(name)
+            .copied()
+            .with_context(|| format!("manifest const {name} missing"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name} missing from manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join(format!("tp-manifest-{}", std::process::id()));
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","consts":{"S":16,"GP":8},
+                "artifacts":{"surface_fit":{"file":"surface_fit.hlo.txt",
+                "inputs":[[8],[8],[16,8,8]],"outputs":[[16,7,7,16]]}}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.konst("S").unwrap(), 16);
+        let a = m.artifact("surface_fit").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.outputs[0], vec![16, 7, 7, 16]);
+        assert!(a.file.ends_with("surface_fit.hlo.txt"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = std::env::temp_dir().join(format!("tp-manifest-bad-{}", std::process::id()));
+        write_manifest(&dir, r#"{"format":"proto","consts":{},"artifacts":{}}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_lookups_error() {
+        let dir = std::env::temp_dir().join(format!("tp-manifest-miss-{}", std::process::id()));
+        write_manifest(&dir, r#"{"format":"hlo-text","consts":{},"artifacts":{}}"#);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.konst("S").is_err());
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // when `make artifacts` has run, validate the real manifest
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["surface_fit", "surface_pipeline", "kmeans_step"] {
+                let a = m.artifact(name).unwrap();
+                assert!(a.file.exists(), "{} missing", a.file.display());
+            }
+            assert_eq!(m.konst("GP").unwrap(), 8);
+        }
+    }
+}

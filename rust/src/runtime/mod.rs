@@ -1,0 +1,17 @@
+//! PJRT execution of the AOT artifacts built by `python/compile/aot.py`.
+//!
+//! Python runs once at build time; at run time the Rust binary loads
+//! the HLO-*text* artifacts (`artifacts/*.hlo.txt`), compiles them on
+//! the PJRT CPU client via the `xla` crate, and executes them on the
+//! offline-analysis hot path.  [`accel`] adapts the compiled
+//! executables to the [`crate::offline::surface::SurfaceBackend`] and
+//! [`crate::offline::kmeans::KmeansBackend`] traits, with the native
+//! Rust math as the parity-tested fallback when artifacts are absent.
+
+pub mod accel;
+pub mod engine;
+pub mod manifest;
+
+pub use accel::{PjrtKmeans, PjrtSurfaceBackend};
+pub use engine::Engine;
+pub use manifest::Manifest;

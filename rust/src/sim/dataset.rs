@@ -1,0 +1,132 @@
+//! Datasets: the paper partitions transfer requests into small, medium
+//! and large average-file-size classes (§5.1) because achievable
+//! throughput depends strongly on `f_avg` and `n`.
+
+use crate::util::rng::Rng;
+
+/// File-size class used throughout §5's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FileSizeClass {
+    /// ~0.5–10 MB files: control-channel (pipelining) dominated.
+    Small,
+    /// ~10–256 MB: mixed regime.
+    Medium,
+    /// ~0.25–8 GB: stream (parallelism/concurrency) dominated.
+    Large,
+}
+
+impl FileSizeClass {
+    pub fn all() -> [FileSizeClass; 3] {
+        [Self::Small, Self::Medium, Self::Large]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Small => "small",
+            Self::Medium => "medium",
+            Self::Large => "large",
+        }
+    }
+
+    /// Average-file-size bounds (MB) for classification.
+    pub fn bounds_mb(&self) -> (f64, f64) {
+        match self {
+            Self::Small => (0.1, 10.0),
+            Self::Medium => (10.0, 256.0),
+            Self::Large => (256.0, 16_384.0),
+        }
+    }
+
+    pub fn classify(avg_file_mb: f64) -> FileSizeClass {
+        if avg_file_mb < 10.0 {
+            Self::Small
+        } else if avg_file_mb < 256.0 {
+            Self::Medium
+        } else {
+            Self::Large
+        }
+    }
+}
+
+/// A transfer request's data description (the `data_args` of
+/// Algorithm 1): total volume is implied by `n_files * avg_file_mb`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub n_files: u64,
+    pub avg_file_mb: f64,
+}
+
+impl Dataset {
+    pub fn new(n_files: u64, avg_file_mb: f64) -> Dataset {
+        assert!(n_files > 0 && avg_file_mb > 0.0);
+        Dataset {
+            n_files,
+            avg_file_mb,
+        }
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.n_files as f64 * self.avg_file_mb
+    }
+
+    pub fn class(&self) -> FileSizeClass {
+        FileSizeClass::classify(self.avg_file_mb)
+    }
+
+    /// Draw a random dataset of the given class (sizes log-uniform in
+    /// the class bounds; file counts sized so totals stay comparable).
+    pub fn sample(class: FileSizeClass, rng: &mut Rng) -> Dataset {
+        let (lo, hi) = class.bounds_mb();
+        let avg = (rng.uniform(lo.ln(), hi.ln())).exp();
+        // target total volume 2–64 GB
+        let total_mb = rng.uniform(2_048.0, 65_536.0);
+        let n = ((total_mb / avg).round() as u64).max(4);
+        Dataset::new(n, avg)
+    }
+
+    /// Split off a sample-transfer chunk of roughly `frac` of the data
+    /// (Algorithm 1 performs sample transfers on a "small predefined
+    /// portion of the data").
+    pub fn sample_chunk(&self, frac: f64) -> Dataset {
+        let files = ((self.n_files as f64 * frac).ceil() as u64).clamp(1, self.n_files);
+        Dataset::new(files, self.avg_file_mb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_matches_bounds() {
+        assert_eq!(FileSizeClass::classify(1.0), FileSizeClass::Small);
+        assert_eq!(FileSizeClass::classify(100.0), FileSizeClass::Medium);
+        assert_eq!(FileSizeClass::classify(1000.0), FileSizeClass::Large);
+    }
+
+    #[test]
+    fn sampled_datasets_stay_in_class() {
+        let mut rng = Rng::new(1);
+        for class in FileSizeClass::all() {
+            for _ in 0..50 {
+                let d = Dataset::sample(class, &mut rng);
+                assert_eq!(d.class(), class, "{d:?}");
+                assert!(d.n_files >= 4);
+            }
+        }
+    }
+
+    #[test]
+    fn sample_chunk_bounds() {
+        let d = Dataset::new(1000, 5.0);
+        let c = d.sample_chunk(0.01);
+        assert_eq!(c.n_files, 10);
+        assert_eq!(d.sample_chunk(2.0).n_files, 1000);
+        assert_eq!(Dataset::new(3, 5.0).sample_chunk(0.001).n_files, 1);
+    }
+
+    #[test]
+    fn total_volume() {
+        assert_eq!(Dataset::new(100, 2.5).total_mb(), 250.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! The single-job simulation engine: a clock, a traffic process and a
+//! throughput model, executing chunked transfers under a pluggable
+//! per-chunk parameter policy.  Every optimizer (ASM and the six
+//! baselines) runs against this same engine in the experiments.
+
+use crate::sim::dataset::Dataset;
+use crate::sim::profile::NetProfile;
+use crate::sim::traffic::{LoadState, TrafficProcess};
+use crate::sim::transfer::ThroughputModel;
+use crate::util::rng::Rng;
+use crate::Params;
+
+/// Context handed to the policy before each chunk.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkCtx {
+    pub chunk_idx: usize,
+    /// seconds since the transfer started
+    pub elapsed_s: f64,
+    /// measured throughput of the previous chunk (None on the first)
+    pub last_throughput: Option<f64>,
+    pub last_params: Option<Params>,
+    pub remaining_mb: f64,
+}
+
+/// One per-chunk measurement record.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkSample {
+    pub t_s: f64,
+    pub params: Params,
+    pub throughput_mbps: f64,
+    pub chunk_mb: f64,
+    /// dead time charged for the parameter change before this chunk
+    pub penalty_s: f64,
+}
+
+/// Result of a full simulated transfer.
+#[derive(Debug, Clone)]
+pub struct TransferOutcome {
+    pub total_mb: f64,
+    pub duration_s: f64,
+    pub samples: Vec<ChunkSample>,
+}
+
+impl TransferOutcome {
+    /// Volume-weighted average end-to-end throughput in Mbps.
+    pub fn avg_throughput_mbps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.total_mb * 8.0 / self.duration_s
+    }
+
+    pub fn param_changes(&self) -> usize {
+        self.samples
+            .windows(2)
+            .filter(|w| w[0].params != w[1].params)
+            .count()
+    }
+}
+
+/// Simulation environment for one user on one network.
+pub struct SimEnv {
+    pub model: ThroughputModel,
+    pub traffic: TrafficProcess,
+    pub now_s: f64,
+    pub rng: Rng,
+}
+
+impl SimEnv {
+    pub fn new(profile: NetProfile, seed: u64) -> SimEnv {
+        let traffic = TrafficProcess::new(&profile, seed);
+        SimEnv {
+            model: ThroughputModel::new(profile),
+            traffic,
+            now_s: 0.0,
+            rng: Rng::new(seed ^ 0x5e55_1015),
+        }
+    }
+
+    /// Pin the diurnal phase (peak vs off-peak experiments).
+    pub fn with_phase(mut self, phase_s: f64) -> SimEnv {
+        self.traffic = self.traffic.with_phase(phase_s);
+        self
+    }
+
+    /// Advance the clock, returning the new load state.
+    pub fn advance(&mut self, dt_s: f64) -> LoadState {
+        self.now_s += dt_s;
+        self.traffic.at(self.now_s)
+    }
+
+    pub fn load_now(&mut self) -> LoadState {
+        self.traffic.at(self.now_s)
+    }
+
+    /// Execute a single sample/chunk transfer at `params`, advancing the
+    /// clock by its duration.  Returns (measured Mbps, duration s).
+    pub fn transfer_chunk(
+        &mut self,
+        params: Params,
+        chunk: &Dataset,
+        prev_params: Option<Params>,
+    ) -> (f64, f64) {
+        let load = self.traffic.at(self.now_s);
+        let th = self
+            .model
+            .sample(params, chunk, &load, &mut self.rng)
+            .max(1e-3);
+        let penalty = prev_params
+            .map(|prev| self.model.param_change_penalty_s(prev, params))
+            .unwrap_or(0.0);
+        let duration = chunk.total_mb() * 8.0 / th + penalty;
+        self.now_s += duration;
+        // measured throughput includes the switch penalty
+        let measured = chunk.total_mb() * 8.0 / duration;
+        (measured, duration)
+    }
+
+    /// Run a full chunked transfer under `policy` (called before every
+    /// chunk with the running context).
+    pub fn run_transfer<F>(
+        &mut self,
+        dataset: &Dataset,
+        chunk_mb: f64,
+        mut policy: F,
+    ) -> TransferOutcome
+    where
+        F: FnMut(&mut SimEnv, &ChunkCtx) -> Params,
+    {
+        let total_mb = dataset.total_mb();
+        let start = self.now_s;
+        let mut remaining_mb = total_mb;
+        let mut samples: Vec<ChunkSample> = Vec::new();
+        let mut last_params: Option<Params> = None;
+        let mut last_th: Option<f64> = None;
+        let mut idx = 0usize;
+
+        while remaining_mb > 1e-9 {
+            let this_mb = chunk_mb.min(remaining_mb);
+            let files = ((this_mb / dataset.avg_file_mb).ceil() as u64).max(1);
+            let chunk = Dataset::new(files, this_mb / files as f64);
+
+            let ctx = ChunkCtx {
+                chunk_idx: idx,
+                elapsed_s: self.now_s - start,
+                last_throughput: last_th,
+                last_params,
+                remaining_mb,
+            };
+            let params = policy(self, &ctx).clamp(self.model.profile.max_param);
+            let penalty = last_params
+                .map(|prev| self.model.param_change_penalty_s(prev, params))
+                .unwrap_or(0.0);
+            let load = self.traffic.at(self.now_s);
+            let th = self
+                .model
+                .sample(params, &chunk, &load, &mut self.rng)
+                .max(1e-3);
+            let duration = chunk.total_mb() * 8.0 / th + penalty;
+            self.now_s += duration;
+
+            let measured = chunk.total_mb() * 8.0 / duration;
+            samples.push(ChunkSample {
+                t_s: self.now_s - start,
+                params,
+                throughput_mbps: measured,
+                chunk_mb: chunk.total_mb(),
+                penalty_s: penalty,
+            });
+            remaining_mb -= chunk.total_mb();
+            last_params = Some(params);
+            last_th = Some(measured);
+            idx += 1;
+        }
+
+        TransferOutcome {
+            total_mb,
+            duration_s: self.now_s - start,
+            samples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> SimEnv {
+        SimEnv::new(NetProfile::xsede(), 42).with_phase(0.0)
+    }
+
+    #[test]
+    fn static_policy_transfers_all_data() {
+        let mut e = env();
+        let d = Dataset::new(64, 256.0); // 16 GB
+        let out = e.run_transfer(&d, 2048.0, |_, _| Params::new(8, 4, 8));
+        assert!((out.total_mb - d.total_mb()).abs() < 1e-6);
+        let moved: f64 = out.samples.iter().map(|s| s.chunk_mb).sum();
+        assert!((moved - d.total_mb()).abs() < 1e-6);
+        assert!(out.duration_s > 0.0);
+        assert_eq!(out.param_changes(), 0);
+    }
+
+    #[test]
+    fn avg_throughput_consistent_with_duration() {
+        let mut e = env();
+        let d = Dataset::new(32, 512.0);
+        let out = e.run_transfer(&d, 4096.0, |_, _| Params::new(8, 4, 8));
+        let th = out.avg_throughput_mbps();
+        assert!((th - out.total_mb * 8.0 / out.duration_s).abs() < 1e-9);
+        assert!(th > 100.0, "implausibly slow: {th}");
+    }
+
+    #[test]
+    fn param_changes_cost_time() {
+        let d = Dataset::new(64, 256.0);
+        let mut e1 = SimEnv::new(NetProfile::xsede(), 7).with_phase(0.0);
+        let steady = e1.run_transfer(&d, 1024.0, |_, _| Params::new(8, 4, 8));
+        let mut e2 = SimEnv::new(NetProfile::xsede(), 7).with_phase(0.0);
+        let thrash = e2.run_transfer(&d, 1024.0, |_, ctx| {
+            // oscillate cc between 8 and 16 every chunk
+            if ctx.chunk_idx % 2 == 0 {
+                Params::new(8, 4, 8)
+            } else {
+                Params::new(16, 4, 8)
+            }
+        });
+        assert!(
+            thrash.duration_s > steady.duration_s,
+            "thrash={} steady={}",
+            thrash.duration_s,
+            steady.duration_s
+        );
+        assert!(thrash.samples.iter().any(|s| s.penalty_s > 0.0));
+    }
+
+    #[test]
+    fn better_params_finish_faster() {
+        let d = Dataset::new(64, 256.0);
+        let mut e1 = SimEnv::new(NetProfile::xsede(), 9).with_phase(0.0);
+        let slow = e1.run_transfer(&d, 2048.0, |_, _| Params::DEFAULT);
+        let mut e2 = SimEnv::new(NetProfile::xsede(), 9).with_phase(0.0);
+        let opt = {
+            let load = e2.load_now();
+            e2.model.true_optimum(&d, &load).0
+        };
+        let fast = e2.run_transfer(&d, 2048.0, |_, _| opt);
+        assert!(
+            fast.duration_s * 2.0 < slow.duration_s,
+            "optimized should be >2x faster: {} vs {}",
+            fast.duration_s,
+            slow.duration_s
+        );
+    }
+
+    #[test]
+    fn clock_monotone_and_samples_ordered() {
+        let mut e = env();
+        let d = Dataset::new(40, 128.0);
+        let out = e.run_transfer(&d, 512.0, |_, _| Params::new(4, 4, 4));
+        for w in out.samples.windows(2) {
+            assert!(w[1].t_s > w[0].t_s);
+        }
+    }
+
+    #[test]
+    fn policy_sees_running_context() {
+        let mut e = env();
+        let d = Dataset::new(16, 256.0);
+        let mut seen_last_th = false;
+        let _ = e.run_transfer(&d, 1024.0, |_, ctx| {
+            if ctx.chunk_idx > 0 {
+                assert!(ctx.last_throughput.is_some());
+                assert!(ctx.last_params.is_some());
+                seen_last_th = true;
+            } else {
+                assert!(ctx.last_throughput.is_none());
+            }
+            Params::new(4, 2, 4)
+        });
+        assert!(seen_last_th);
+    }
+}

@@ -1,0 +1,128 @@
+//! Bottleneck-link allocation across concurrent jobs — the multi-user
+//! fairness substrate (§5.4).  TCP divides a bottleneck roughly in
+//! proportion to stream counts; jobs whose end systems can't absorb
+//! their share leave the surplus to others (max-min style water-fill).
+
+/// One job's demand on the bottleneck.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkDemand {
+    /// TCP streams the job has open (its share weight).
+    pub streams: f64,
+    /// The most it can use (stream rate × streams, end-system caps...).
+    pub demand_mbps: f64,
+}
+
+/// Allocate `capacity_mbps` across jobs proportionally to stream count,
+/// with `bg_streams` phantom streams modelling external traffic that
+/// consumes its own share.  Water-fills: capped jobs return surplus to
+/// the uncapped pool.  Returns per-job allocations (Σ ≤ capacity).
+pub fn share_bottleneck(
+    capacity_mbps: f64,
+    demands: &[LinkDemand],
+    bg_streams: f64,
+) -> Vec<f64> {
+    let n = demands.len();
+    let mut alloc = vec![0.0; n];
+    if n == 0 {
+        return alloc;
+    }
+    let mut active: Vec<usize> = (0..n).collect();
+    // background claims its proportional share up front
+    let total_streams: f64 =
+        demands.iter().map(|d| d.streams).sum::<f64>() + bg_streams;
+    let mut pool = capacity_mbps * (1.0 - bg_streams / total_streams.max(1e-9));
+
+    // iterative water-fill: settle jobs whose demand is below their
+    // proportional share, redistribute the remainder
+    for _ in 0..n + 1 {
+        if active.is_empty() || pool <= 1e-12 {
+            break;
+        }
+        let w: f64 = active.iter().map(|&i| demands[i].streams).sum();
+        if w <= 1e-12 {
+            break;
+        }
+        let mut newly_capped = Vec::new();
+        for &i in &active {
+            let fair = pool * demands[i].streams / w;
+            if demands[i].demand_mbps <= fair {
+                alloc[i] = demands[i].demand_mbps;
+                newly_capped.push(i);
+            }
+        }
+        if newly_capped.is_empty() {
+            // everyone is bottleneck-limited: take the fair split
+            for &i in &active {
+                alloc[i] = pool * demands[i].streams / w;
+            }
+            break;
+        }
+        let used: f64 = newly_capped.iter().map(|&i| alloc[i]).sum();
+        pool -= used;
+        active.retain(|i| !newly_capped.contains(i));
+    }
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(streams: f64, demand: f64) -> LinkDemand {
+        LinkDemand {
+            streams,
+            demand_mbps: demand,
+        }
+    }
+
+    #[test]
+    fn equal_jobs_split_equally() {
+        let a = share_bottleneck(1000.0, &[d(8.0, 900.0), d(8.0, 900.0)], 0.0);
+        assert!((a[0] - 500.0).abs() < 1e-6);
+        assert!((a[1] - 500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn share_proportional_to_streams() {
+        let a = share_bottleneck(900.0, &[d(1.0, 1e9), d(2.0, 1e9)], 0.0);
+        assert!((a[0] - 300.0).abs() < 1e-6, "{a:?}");
+        assert!((a[1] - 600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn capped_job_returns_surplus() {
+        let a = share_bottleneck(1000.0, &[d(8.0, 100.0), d(8.0, 1e9)], 0.0);
+        assert!((a[0] - 100.0).abs() < 1e-6);
+        assert!((a[1] - 900.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn background_takes_its_share() {
+        let a = share_bottleneck(1000.0, &[d(10.0, 1e9)], 10.0);
+        assert!((a[0] - 500.0).abs() < 1e-6, "{a:?}");
+    }
+
+    #[test]
+    fn never_oversubscribes() {
+        let a = share_bottleneck(
+            1000.0,
+            &[d(4.0, 800.0), d(6.0, 700.0), d(2.0, 50.0)],
+            5.0,
+        );
+        assert!(a.iter().sum::<f64>() <= 1000.0 + 1e-9, "{a:?}");
+        for (i, &x) in a.iter().enumerate() {
+            assert!(x >= 0.0 && x <= [800.0, 700.0, 50.0][i] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        assert!(share_bottleneck(1000.0, &[], 5.0).is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_allocates_zero() {
+        let a = share_bottleneck(0.0, &[d(4.0, 100.0)], 0.0);
+        assert_eq!(a[0], 0.0);
+    }
+}

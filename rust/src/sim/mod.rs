@@ -1,0 +1,35 @@
+//! The testbed substrate: a mechanistic wide-area data-transfer
+//! simulator standing in for the paper's XSEDE / DIDCLAB / Chameleon
+//! environments (DESIGN.md §2 documents the substitution).
+//!
+//! The simulator reproduces the *mechanisms* that make the paper's
+//! throughput function `th = f(e_s, e_d, b, rtt, f_avg, n, cc, p, pp,
+//! l_ctd)` (Eq 1) look the way it does:
+//!
+//! * per-stream TCP throughput capped by window (buffer/RTT) and by the
+//!   Mathis loss response `MSS / (RTT · √loss)`;
+//! * congestion loss growing with total offered load on the bottleneck;
+//! * TCP-fair sharing against background streams (`l_ctd`);
+//! * control-channel round trips per file, amortized by pipelining;
+//! * parallelism fragmentation overhead on small files;
+//! * end-system caps (disk, NIC, cores) and per-process overhead;
+//! * slow-start ramp + process startup cost when parameters change
+//!   mid-transfer (the paper's Issue 2/3);
+//! * a diurnal peak/off-peak background-traffic process with
+//!   Ornstein–Uhlenbeck noise and Poisson bursts.
+
+pub mod dataset;
+pub mod engine;
+pub mod link;
+pub mod multiuser;
+pub mod profile;
+pub mod tcp;
+pub mod traffic;
+pub mod transfer;
+
+pub use dataset::{Dataset, FileSizeClass};
+pub use engine::{SimEnv, TransferOutcome};
+pub use multiuser::{MultiUserSim, UserOutcome};
+pub use profile::NetProfile;
+pub use traffic::{LoadState, TrafficProcess};
+pub use transfer::ThroughputModel;

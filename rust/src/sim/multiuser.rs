@@ -1,0 +1,330 @@
+//! Multi-user contention simulation — the §5.4 fairness experiment
+//! substrate (Chameleon CHI-UC ↔ TACC, four users running the same
+//! optimization technique simultaneously).
+//!
+//! Tick-based: every tick the simulator collects each active user's
+//! protocol parameters, derives per-stream rate from the *joint*
+//! equilibrium loss, water-fills the bottleneck proportionally to
+//! stream counts ([`crate::sim::link::share_bottleneck`]), applies each
+//! user's end-system and dataset factors, and credits the transferred
+//! bytes.  User policies observe their own measured throughput once per
+//! decision period — exactly the feedback loop the paper describes
+//! ("individual ASM instances can detect performance drop and start
+//! recalculating the parameters").
+
+use crate::sim::dataset::Dataset;
+use crate::sim::link::{share_bottleneck, LinkDemand};
+use crate::sim::profile::NetProfile;
+use crate::sim::tcp;
+use crate::sim::traffic::TrafficProcess;
+use crate::sim::transfer::ThroughputModel;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::Params;
+
+/// Feedback handed to a user's policy at each decision epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct UserCtx {
+    pub user_id: usize,
+    pub t_s: f64,
+    /// measured throughput (Mbps) over the last decision period
+    pub last_throughput: Option<f64>,
+    pub current_params: Params,
+    pub decision_idx: usize,
+}
+
+/// A per-user parameter policy.
+pub trait UserPolicy {
+    /// Called once per decision period; returns the params to use next.
+    fn decide(&mut self, ctx: &UserCtx) -> Params;
+    fn name(&self) -> &str {
+        "policy"
+    }
+}
+
+impl<F: FnMut(&UserCtx) -> Params> UserPolicy for F {
+    fn decide(&mut self, ctx: &UserCtx) -> Params {
+        self(ctx)
+    }
+}
+
+/// Result for one user.
+#[derive(Debug, Clone)]
+pub struct UserOutcome {
+    pub user_id: usize,
+    /// (t, Mbps) series at tick resolution
+    pub series: Vec<(f64, f64)>,
+    pub mean_throughput_mbps: f64,
+    pub transferred_mb: f64,
+}
+
+/// Multi-user shared-bottleneck simulation.
+pub struct MultiUserSim {
+    pub profile: NetProfile,
+    model: ThroughputModel,
+    traffic: TrafficProcess,
+    pub tick_s: f64,
+    pub decision_period_s: f64,
+    rng: Rng,
+}
+
+impl MultiUserSim {
+    pub fn new(profile: NetProfile, seed: u64) -> MultiUserSim {
+        let traffic = TrafficProcess::new(&profile, seed).with_phase(0.0);
+        MultiUserSim {
+            model: ThroughputModel::new(profile.clone()),
+            profile,
+            traffic,
+            tick_s: 1.0,
+            decision_period_s: 20.0,
+            rng: Rng::new(seed ^ 0x6d756c7469),
+        }
+    }
+
+    /// Per-user raw stream demand at the current loss (hard caps only;
+    /// the soft efficiency factors are applied to the allocation so the
+    /// decomposition mirrors `ThroughputModel::steady` exactly).
+    fn user_demand(&self, params: Params, lambda: f64) -> f64 {
+        let p = &self.profile;
+        let s = params.total_streams() as f64;
+        let r = tcp::stream_rate_mbps(p, lambda);
+        (s * r).min(p.disk_mbps).min(p.nic_mbps)
+    }
+
+    /// Soft efficiency factors on an allocation (steady() steps 4-5).
+    fn user_efficiency(&self, params: Params, total_streams: f64) -> f64 {
+        let p = &self.profile;
+        let s = params.total_streams() as f64;
+        let mut eff = self.model.thrash_factor(total_streams);
+        eff *= self.model.sys_factor(s);
+        eff *= self.model.overload_factor(total_streams);
+        if params.cc > p.cores {
+            eff *= (p.cores as f64 / params.cc as f64).powf(0.4);
+        }
+        eff
+    }
+
+    /// Dataset-dependent goodput factor (control channel + fragmentation),
+    /// mirroring `ThroughputModel::steady` steps (5)-(6).
+    fn dataset_factor(&self, params: Params, dataset: &Dataset, alloc_mbps: f64) -> f64 {
+        let p = &self.profile;
+        let files_per_ch = (dataset.n_files as f64 / params.cc as f64).max(1.0);
+        let ch_rate = (alloc_mbps / params.cc as f64).max(1e-9);
+        let data_t = dataset.avg_file_mb * 8.0 / ch_rate;
+        let pp_eff = (params.pp as f64).min(files_per_ch).max(1.0);
+        let ack_t = p.rtt_s / pp_eff + 0.001 * params.pp as f64 * p.rtt_s;
+        let ctrl = data_t / (data_t + ack_t);
+        let frag =
+            dataset.avg_file_mb / (dataset.avg_file_mb + (params.p as f64 - 1.0) * 0.5);
+        ctrl * frag
+    }
+
+    /// Run `duration_s` of contention with one policy and dataset per
+    /// user.  All users transfer continuously (datasets are treated as
+    /// unbounded pools, as in the paper's fixed-duration runs).
+    pub fn run(
+        &mut self,
+        policies: &mut [Box<dyn UserPolicy>],
+        datasets: &[Dataset],
+        duration_s: f64,
+    ) -> Vec<UserOutcome> {
+        let n = policies.len();
+        assert_eq!(n, datasets.len());
+        let mut params: Vec<Params> = vec![Params::DEFAULT; n];
+        let mut series: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n];
+        let mut moved_mb = vec![0.0f64; n];
+        let mut window_mb = vec![0.0f64; n];
+        let mut decision_idx = vec![0usize; n];
+        // dead time remaining per user (param-change penalties)
+        let mut stall_s = vec![0.0f64; n];
+
+        // initial decisions
+        for (i, pol) in policies.iter_mut().enumerate() {
+            let ctx = UserCtx {
+                user_id: i,
+                t_s: 0.0,
+                last_throughput: None,
+                current_params: params[i],
+                decision_idx: 0,
+            };
+            params[i] = pol.decide(&ctx).clamp(self.profile.max_param);
+            decision_idx[i] = 1;
+        }
+
+        let ticks = (duration_s / self.tick_s).ceil() as usize;
+        let decision_ticks = (self.decision_period_s / self.tick_s).round() as usize;
+
+        for tick in 0..ticks {
+            let t = tick as f64 * self.tick_s;
+            let load = self.traffic.at(t);
+
+            // joint equilibrium loss across every user's streams + bg
+            let total_streams: f64 = params
+                .iter()
+                .map(|p| p.total_streams() as f64)
+                .sum::<f64>()
+                + load.bg_streams;
+            let lambda = self.model.pressure_loss(total_streams);
+
+            let demands: Vec<LinkDemand> = (0..n)
+                .map(|i| LinkDemand {
+                    streams: params[i].total_streams() as f64,
+                    demand_mbps: self.user_demand(params[i], lambda),
+                })
+                .collect();
+            let alloc =
+                share_bottleneck(self.profile.bandwidth_mbps, &demands, load.bg_streams);
+
+            for i in 0..n {
+                let mut th = alloc[i]
+                    * self.user_efficiency(params[i], total_streams)
+                    * self.dataset_factor(params[i], &datasets[i], alloc[i]);
+                // measurement noise at tick granularity
+                th *= self.rng.lognormal(0.0, 0.03);
+                // stalled users (param-change dead time) move nothing
+                if stall_s[i] > 0.0 {
+                    let stalled = stall_s[i].min(self.tick_s);
+                    stall_s[i] -= stalled;
+                    th *= 1.0 - stalled / self.tick_s;
+                }
+                series[i].push((t, th));
+                let mb = th / 8.0 * self.tick_s;
+                moved_mb[i] += mb;
+                window_mb[i] += mb;
+            }
+
+            // decision epochs, staggered per user (the §5.4 first-prober
+            // asymmetry: users do not probe in lockstep)
+            for i in 0..n {
+                let offset = i * decision_ticks / n.max(1);
+                if (tick + 1) % decision_ticks == offset % decision_ticks {
+                    let measured =
+                        window_mb[i] * 8.0 / (decision_ticks as f64 * self.tick_s);
+                    let ctx = UserCtx {
+                        user_id: i,
+                        t_s: t,
+                        last_throughput: Some(measured),
+                        current_params: params[i],
+                        decision_idx: decision_idx[i],
+                    };
+                    let next = policies[i].decide(&ctx).clamp(self.profile.max_param);
+                    if next != params[i] {
+                        stall_s[i] += self.model.param_change_penalty_s(params[i], next);
+                        params[i] = next;
+                    }
+                    decision_idx[i] += 1;
+                    window_mb[i] = 0.0;
+                }
+            }
+        }
+
+        (0..n)
+            .map(|i| {
+                let ths: Vec<f64> = series[i].iter().map(|&(_, th)| th).collect();
+                UserOutcome {
+                    user_id: i,
+                    mean_throughput_mbps: stats::mean(&ths),
+                    series: std::mem::take(&mut series[i]),
+                    transferred_mb: moved_mb[i],
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset() -> Dataset {
+        Dataset::new(256, 512.0)
+    }
+
+    fn static_policy(params: Params) -> Box<dyn UserPolicy> {
+        Box::new(move |_: &UserCtx| params)
+    }
+
+    #[test]
+    fn aggregate_never_exceeds_link() {
+        let mut sim = MultiUserSim::new(NetProfile::chameleon(), 1);
+        let mut pols: Vec<Box<dyn UserPolicy>> = (0..4)
+            .map(|_| static_policy(Params::new(8, 4, 8)))
+            .collect();
+        let ds = vec![dataset(); 4];
+        let out = sim.run(&mut pols, &ds, 120.0);
+        let cap = sim.profile.bandwidth_mbps;
+        let nticks = out[0].series.len();
+        for t in 0..nticks {
+            let total: f64 = out.iter().map(|u| u.series[t].1).sum();
+            assert!(total <= cap * 1.15, "tick {t}: total={total}"); // noise slack
+        }
+    }
+
+    #[test]
+    fn identical_users_get_fair_shares() {
+        let mut sim = MultiUserSim::new(NetProfile::chameleon(), 3);
+        let mut pols: Vec<Box<dyn UserPolicy>> = (0..4)
+            .map(|_| static_policy(Params::new(8, 4, 8)))
+            .collect();
+        let ds = vec![dataset(); 4];
+        let out = sim.run(&mut pols, &ds, 300.0);
+        let means: Vec<f64> = out.iter().map(|u| u.mean_throughput_mbps).collect();
+        let jain = stats::jain_index(&means);
+        assert!(jain > 0.98, "jain={jain} means={means:?}");
+    }
+
+    #[test]
+    fn more_streams_grab_more_share() {
+        let mut sim = MultiUserSim::new(NetProfile::chameleon(), 5);
+        let mut pols: Vec<Box<dyn UserPolicy>> = vec![
+            static_policy(Params::new(16, 4, 8)),
+            static_policy(Params::new(2, 1, 8)),
+        ];
+        let ds = vec![dataset(); 2];
+        let out = sim.run(&mut pols, &ds, 200.0);
+        assert!(
+            out[0].mean_throughput_mbps > 2.0 * out[1].mean_throughput_mbps,
+            "{} vs {}",
+            out[0].mean_throughput_mbps,
+            out[1].mean_throughput_mbps
+        );
+    }
+
+    #[test]
+    fn param_changes_stall_users() {
+        let mut sim = MultiUserSim::new(NetProfile::chameleon(), 7);
+        // policy that re-shapes cc/p every decision while keeping the
+        // same total stream count (so only the switch penalty differs)
+        struct Thrash(bool);
+        impl UserPolicy for Thrash {
+            fn decide(&mut self, _ctx: &UserCtx) -> Params {
+                self.0 = !self.0;
+                if self.0 {
+                    Params::new(8, 4, 8)
+                } else {
+                    Params::new(4, 8, 8)
+                }
+            }
+        }
+        let mut pols: Vec<Box<dyn UserPolicy>> =
+            vec![Box::new(Thrash(false)), static_policy(Params::new(8, 4, 8))];
+        let ds = vec![dataset(); 2];
+        let out = sim.run(&mut pols, &ds, 300.0);
+        // the thrasher pays stall time the steady user doesn't
+        assert!(out[0].transferred_mb < out[1].transferred_mb);
+    }
+
+    #[test]
+    fn default_params_underutilize() {
+        let mut sim = MultiUserSim::new(NetProfile::chameleon(), 9);
+        let mut pols: Vec<Box<dyn UserPolicy>> =
+            (0..4).map(|_| static_policy(Params::DEFAULT)).collect();
+        let ds = vec![dataset(); 4];
+        let out = sim.run(&mut pols, &ds, 120.0);
+        let total: f64 = out.iter().map(|u| u.mean_throughput_mbps).sum();
+        assert!(
+            total < 0.4 * sim.profile.bandwidth_mbps,
+            "default should underutilize: {total}"
+        );
+    }
+}

@@ -1,0 +1,107 @@
+//! Per-stream TCP throughput model.
+//!
+//! Steady state: a stream is limited by the slower of
+//! * the window cap `buf / RTT` (socket buffer drained once per RTT);
+//! * the Mathis et al. loss response `(MSS / RTT) · (C / √loss)` —
+//!   the reason opening `cc × p` streams helps on lossy long-RTT paths
+//!   and the reason *excessive* streams hurt once they induce loss (§2).
+//!
+//! Transient: newly-opened streams spend `log2(W_ss / W_init)` RTTs in
+//! slow start; we charge that as an equivalent dead time, which is what
+//! makes mid-transfer parameter changes expensive (the paper's Issue 2
+//! and the "changing parameters in real-time is expensive" note, §4.2).
+
+use crate::sim::profile::NetProfile;
+
+/// Mathis constant C = sqrt(3/2) for periodic-loss TCP Reno.
+const MATHIS_C: f64 = 1.224744871391589;
+
+/// Steady-state per-stream rate in Mbps under loss probability `loss`.
+pub fn stream_rate_mbps(profile: &NetProfile, loss: f64) -> f64 {
+    let window_cap = profile.window_cap_mbps();
+    let loss = loss.max(1e-12);
+    // MSS bits per RTT, scaled by Mathis loss response
+    let mathis = (profile.mss_bytes * 8.0 / 1e6) / profile.rtt_s * MATHIS_C / loss.sqrt();
+    window_cap.min(mathis).min(profile.bandwidth_mbps)
+}
+
+/// Effective loss probability when `offered_mbps` of demand meets a
+/// bottleneck of `capacity_mbps`: base path loss plus a congestion term
+/// that grows quadratically once utilization exceeds ~92% (queue
+/// build-up then tail drop).  This is the feedback that gives the
+/// throughput surfaces their interior maxima.
+pub fn congestion_loss(base_loss: f64, offered_mbps: f64, capacity_mbps: f64) -> f64 {
+    let u = offered_mbps / capacity_mbps;
+    let knee = 0.92;
+    if u <= knee {
+        base_loss
+    } else {
+        let over = u - knee;
+        // capped at 0.5: loss is a probability, and past ~50% TCP is
+        // effectively stalled anyway
+        (base_loss + 2e-5 * over * over / (knee * knee)).min(0.5)
+    }
+}
+
+/// Slow-start dead time (seconds) charged when `new_streams` streams
+/// are (re)opened: ~`log2(W_ss / MSS)` RTTs at roughly half rate, plus
+/// a flat per-process setup cost charged by the caller.
+pub fn slow_start_penalty_s(profile: &NetProfile, per_stream_rate_mbps: f64) -> f64 {
+    let w_ss_bytes = per_stream_rate_mbps * 1e6 / 8.0 * profile.rtt_s; // target window
+    let ratio = (w_ss_bytes / profile.mss_bytes).max(2.0);
+    // half the ramp is "lost" relative to steady state
+    0.5 * ratio.log2() * profile.rtt_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_cap_binds_at_tiny_loss() {
+        let p = NetProfile::didclab(); // 10 MB buf / 0.2 ms = huge cap
+        let r = stream_rate_mbps(&p, 1e-12);
+        assert!((r - p.bandwidth_mbps).abs() < 1e-9); // clamped to link
+    }
+
+    #[test]
+    fn mathis_binds_at_high_loss() {
+        let p = NetProfile::xsede();
+        let lossy = stream_rate_mbps(&p, 1e-3);
+        let clean = stream_rate_mbps(&p, 1e-6);
+        assert!(lossy < clean);
+        // 1500B * 8 / 40ms = 0.3 Mbps base; /sqrt(1e-3) ~ 38.7 * C
+        assert!((lossy - 0.3 * MATHIS_C / (1e-3f64).sqrt()).abs() / lossy < 1e-6);
+    }
+
+    #[test]
+    fn loss_flat_below_knee_grows_above() {
+        let base = 1e-6;
+        assert_eq!(congestion_loss(base, 500.0, 1000.0), base);
+        assert_eq!(congestion_loss(base, 919.0, 1000.0), base);
+        let l1 = congestion_loss(base, 1000.0, 1000.0);
+        let l2 = congestion_loss(base, 1200.0, 1000.0);
+        assert!(l1 > base && l2 > l1);
+    }
+
+    #[test]
+    fn slow_start_penalty_scales_with_rtt() {
+        let x = NetProfile::xsede(); // 40 ms
+        let d = NetProfile::didclab(); // 0.2 ms
+        let px = slow_start_penalty_s(&x, 300.0);
+        let pd = slow_start_penalty_s(&d, 300.0);
+        assert!(px > pd * 50.0, "px={px} pd={pd}");
+        assert!(px < 1.0, "penalty should be sub-second: {px}");
+    }
+
+    #[test]
+    fn stream_rate_monotone_in_loss() {
+        let p = NetProfile::didclab_xsede();
+        let mut prev = f64::INFINITY;
+        for &l in &[1e-6, 1e-5, 1e-4, 1e-3, 1e-2] {
+            let r = stream_rate_mbps(&p, l);
+            assert!(r <= prev + 1e-12);
+            prev = r;
+        }
+    }
+}

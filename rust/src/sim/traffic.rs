@@ -1,0 +1,218 @@
+//! Background ("contending") traffic — `l_ctd` of Eq 1.
+//!
+//! The paper's networks are shared: achievable throughput depends on
+//! external load, which changes diurnally (peak vs off-peak hours,
+//! §5.1) and stochastically while a long transfer runs.  We model the
+//! equivalent number of background TCP streams at the bottleneck as
+//!
+//! `bg(t) = diurnal(t) · (1 + OU(t)) + burst(t)`
+//!
+//! where `diurnal` interpolates between the profile's off-peak and peak
+//! stream counts over a 24 h cycle, `OU` is mean-reverting noise, and
+//! `burst` is an occasional Poisson-arriving, exponentially-decaying
+//! load spike (a contending bulk transfer coming and going).
+
+use crate::sim::profile::NetProfile;
+use crate::util::rng::Rng;
+
+/// Snapshot of external load at some instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadState {
+    /// Equivalent background streams at the bottleneck.
+    pub bg_streams: f64,
+    /// Normalized intensity in [0, 1]: 0 = idle path, 1 = heaviest
+    /// load the process generates.  Offline analysis buckets on this.
+    pub intensity: f64,
+    /// Whether the diurnal phase counts as peak hours.
+    pub peak: bool,
+}
+
+impl LoadState {
+    /// Bucket the intensity into one of `n` load-intensity tags (the
+    /// per-surface `I_s` of Algorithm 1).
+    pub fn bucket(&self, n: usize) -> usize {
+        assert!(n > 0);
+        ((self.intensity * n as f64) as usize).min(n - 1)
+    }
+}
+
+/// Stateful stochastic background-traffic process.
+#[derive(Debug, Clone)]
+pub struct TrafficProcess {
+    peak_streams: f64,
+    off_streams: f64,
+    /// OU state (relative, mean 0).
+    ou: f64,
+    /// OU mean-reversion rate (1/s) and stationary std.
+    ou_theta: f64,
+    ou_sigma: f64,
+    /// current burst load (streams) and its decay rate
+    burst: f64,
+    burst_decay: f64,
+    /// expected bursts per hour
+    burst_rate_hr: f64,
+    rng: Rng,
+    /// start-of-day offset in seconds (randomized per run)
+    phase_s: f64,
+    last_t: f64,
+}
+
+/// Peak hours: 08:00–20:00 local, with smooth shoulders.
+fn diurnal_weight(tod_s: f64) -> f64 {
+    let h = tod_s / 3600.0;
+    // smooth bump centred on 14:00, width ~6h
+    let x = (h - 14.0) / 6.0;
+    (-x * x).exp()
+}
+
+impl TrafficProcess {
+    pub fn new(profile: &NetProfile, seed: u64) -> TrafficProcess {
+        let mut rng = Rng::new(seed ^ 0x7261666669636b);
+        let phase_s = rng.uniform(0.0, 86_400.0);
+        TrafficProcess {
+            peak_streams: profile.bg_streams_peak,
+            off_streams: profile.bg_streams_offpeak,
+            ou: 0.0,
+            ou_theta: 1.0 / 600.0, // ~10 min correlation time
+            ou_sigma: 0.25,
+            burst: 0.0,
+            burst_decay: 1.0 / 900.0, // ~15 min bursts
+            burst_rate_hr: 0.5,
+            rng,
+            phase_s,
+            last_t: 0.0,
+        }
+    }
+
+    /// Fix the diurnal phase (tests and peak/off-peak experiments).
+    pub fn with_phase(mut self, phase_s: f64) -> TrafficProcess {
+        self.phase_s = phase_s;
+        self
+    }
+
+    /// Deterministic diurnal mean at absolute time `t` seconds.
+    pub fn diurnal_mean(&self, t: f64) -> f64 {
+        let tod = (t + self.phase_s) % 86_400.0;
+        let w = diurnal_weight(tod);
+        self.off_streams + (self.peak_streams - self.off_streams) * w
+    }
+
+    /// Advance the process to time `t` (seconds, monotone) and return
+    /// the load.  Steps the OU/burst dynamics by `t - last_t`.
+    pub fn at(&mut self, t: f64) -> LoadState {
+        let dt = (t - self.last_t).max(0.0);
+        self.last_t = t;
+
+        // OU step (exact discretization)
+        if dt > 0.0 {
+            let a = (-self.ou_theta * dt).exp();
+            let var = self.ou_sigma * self.ou_sigma * (1.0 - a * a);
+            self.ou = self.ou * a + self.rng.normal() * var.sqrt();
+
+            // Poisson burst arrivals over dt
+            let expected = self.burst_rate_hr * dt / 3600.0;
+            let arrivals = self.rng.poisson(expected);
+            for _ in 0..arrivals {
+                self.burst += self.rng.uniform(0.3, 1.0) * self.peak_streams;
+            }
+            self.burst *= (-self.burst_decay * dt).exp();
+        }
+
+        let mean = self.diurnal_mean(t);
+        let bg = (mean * (1.0 + self.ou) + self.burst).max(0.0);
+        let max_bg = self.peak_streams * 2.5; // normalization ceiling
+        let tod = (t + self.phase_s) % 86_400.0;
+        LoadState {
+            bg_streams: bg,
+            intensity: (bg / max_bg).min(1.0),
+            peak: (8.0..20.0).contains(&(tod / 3600.0)),
+        }
+    }
+
+    /// A fixed load state at a given intensity (for controlled
+    /// experiments and offline grid probes).
+    pub fn fixed(profile: &NetProfile, intensity: f64) -> LoadState {
+        let max_bg = profile.bg_streams_peak * 2.5;
+        LoadState {
+            bg_streams: intensity * max_bg,
+            intensity,
+            peak: intensity > 0.4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xsede() -> NetProfile {
+        NetProfile::xsede()
+    }
+
+    #[test]
+    fn diurnal_peaks_in_afternoon() {
+        let p = xsede();
+        let tp = TrafficProcess::new(&p, 1).with_phase(0.0);
+        let night = tp.diurnal_mean(3.0 * 3600.0);
+        let noon = tp.diurnal_mean(14.0 * 3600.0);
+        assert!(noon > night * 1.5, "noon={noon} night={night}");
+        assert!((noon - p.bg_streams_peak).abs() < 1e-6);
+    }
+
+    #[test]
+    fn load_nonnegative_and_bounded_intensity() {
+        let p = xsede();
+        let mut tp = TrafficProcess::new(&p, 7);
+        for i in 0..2_000 {
+            let l = tp.at(i as f64 * 30.0);
+            assert!(l.bg_streams >= 0.0);
+            assert!((0.0..=1.0).contains(&l.intensity));
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let p = xsede();
+        let mut a = TrafficProcess::new(&p, 42);
+        let mut b = TrafficProcess::new(&p, 42);
+        for i in 0..100 {
+            assert_eq!(a.at(i as f64), b.at(i as f64));
+        }
+    }
+
+    #[test]
+    fn bursts_occur_eventually() {
+        let p = xsede();
+        let mut tp = TrafficProcess::new(&p, 3).with_phase(0.0);
+        // sample 3 days at night; bursts should push load above the
+        // diurnal mean at least sometimes
+        let mut above = 0;
+        for i in 0..8_640 {
+            let t = i as f64 * 30.0;
+            let l = tp.at(t);
+            if l.bg_streams > tp.diurnal_mean(t) * 1.5 {
+                above += 1;
+            }
+        }
+        assert!(above > 0, "no bursts in 3 simulated days");
+    }
+
+    #[test]
+    fn fixed_load_buckets() {
+        let p = xsede();
+        let l = TrafficProcess::fixed(&p, 0.9);
+        assert_eq!(l.bucket(5), 4);
+        let l0 = TrafficProcess::fixed(&p, 0.0);
+        assert_eq!(l0.bucket(5), 0);
+        let lmax = TrafficProcess::fixed(&p, 1.0);
+        assert_eq!(lmax.bucket(5), 4);
+    }
+
+    #[test]
+    fn peak_flag_follows_time_of_day() {
+        let p = xsede();
+        let mut tp = TrafficProcess::new(&p, 5).with_phase(0.0);
+        assert!(!tp.at(3.0 * 3600.0).peak);
+        assert!(tp.at(14.0 * 3600.0 + 1.0).peak);
+    }
+}

@@ -1,0 +1,380 @@
+//! The steady-state throughput function — the simulator's answer to the
+//! paper's Eq 1: `th = f(e_s, e_d, b, rtt, f_avg, n, cc, p, pp, l_ctd)`.
+//!
+//! Composition (each factor documented on its helper):
+//!
+//! 1. uncongested per-stream rate `r₀ = min(buf/RTT, Mathis(base loss))`;
+//! 2. congestion pressure `u = (s_total + bg) · r₀ / B` raises loss
+//!    above the ~92% knee (`tcp::congestion_loss`), and the Mathis
+//!    response to that loss throttles every stream — the feedback that
+//!    penalizes opening excessive streams on long-RTT paths;
+//! 3. TCP-fair share of the bottleneck (`B · s / (s + bg)`) caps the
+//!    aggregate against background streams (`l_ctd`);
+//! 4. per-stream window thrash: once the per-stream BDP slice drops to
+//!    a few MSS, fast retransmit stops working and streams stall —
+//!    the dominant penalty on short-RTT/low-BDP paths like DIDCLAB;
+//! 5. end-system overhead: stream bookkeeping `1/(1 + a·s^1.5)`, core
+//!    over-subscription when `cc > cores`, and disk/NIC caps;
+//! 6. the control-channel factor: each file costs one acknowledgement
+//!    RTT amortized by pipelining (`rtt / min(pp, files-per-channel)`),
+//!    plus a mild per-slot queue-management cost that keeps `pp`
+//!    bounded;
+//! 7. the parallelism fragmentation factor: splitting small files into
+//!    `p` streams wastes their tails (why parallelism only pays for
+//!    medium/large files, §2).
+
+use crate::sim::dataset::Dataset;
+use crate::sim::profile::NetProfile;
+use crate::sim::tcp;
+use crate::sim::traffic::LoadState;
+use crate::util::rng::Rng;
+use crate::Params;
+
+/// Demand-pressure ceiling: beyond 1.5× capacity the extra pressure no
+/// longer changes equilibrium loss (queues are already overflowing).
+const PRESSURE_CAP: f64 = 1.5;
+/// Per-extra-stream per-file fragmentation overhead (MB-equivalent).
+const FRAG_MB: f64 = 0.5;
+/// Queue-management cost per pipelining slot (fraction of an RTT).
+const PP_SLOT_COST: f64 = 0.001;
+/// Stream-bookkeeping overhead coefficient (factor 1/(1 + a·s^1.5)).
+const SYS_OVERHEAD_A: f64 = 2e-4;
+/// Window-thrash scale in MSS units.
+const THRASH_MSS: f64 = 0.5;
+/// Multiplicative lognormal noise σ for sampled (measured) throughput.
+pub const SAMPLE_SIGMA: f64 = 0.05;
+
+/// Deterministic throughput model over one network profile.
+///
+/// Profile-derived constants (uncongested per-stream rate, saturation
+/// stream count, BDP, overload γ) are cached at construction: `steady`
+/// sits on the innermost loop of every experiment and the grid scans of
+/// `true_optimum` (§Perf iteration 1 in EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct ThroughputModel {
+    pub profile: NetProfile,
+    /// per-stream rate at base loss (window/Mathis/link min)
+    r0_base: f64,
+    /// streams needed to saturate the bottleneck at base loss
+    s_sat: f64,
+    /// path BDP in bytes (window-thrash scale)
+    bdp_bytes: f64,
+    /// RTT-scaled overload coefficient
+    gamma: f64,
+}
+
+impl ThroughputModel {
+    pub fn new(profile: NetProfile) -> ThroughputModel {
+        let r0_base = tcp::stream_rate_mbps(&profile, profile.base_loss);
+        let s_sat = (profile.bandwidth_mbps / r0_base).max(1.0);
+        let bdp_bytes = profile.bandwidth_mbps * 1e6 * profile.rtt_s / 8.0;
+        let gamma = 0.12 * (profile.rtt_s / 0.020).min(1.0);
+        ThroughputModel {
+            profile,
+            r0_base,
+            s_sat,
+            bdp_bytes,
+            gamma,
+        }
+    }
+
+    /// Loss probability when `total_streams` streams (ours + background)
+    /// press on the bottleneck: congestion pressure is the utilization
+    /// the streams *would* reach at their uncongested rate, capped at
+    /// [`PRESSURE_CAP`].
+    pub fn pressure_loss(&self, total_streams: f64) -> f64 {
+        let p = &self.profile;
+        let u = (total_streams * self.r0_base / p.bandwidth_mbps).min(PRESSURE_CAP);
+        tcp::congestion_loss(p.base_loss, u * p.bandwidth_mbps, p.bandwidth_mbps)
+    }
+
+    /// Per-stream window-thrash factor: the share of the path's BDP
+    /// available to each stream, in MSS units, saturating to 1 when
+    /// streams have room (`w / (w + 0.5·MSS)`).
+    pub fn thrash_factor(&self, total_streams: f64) -> f64 {
+        let w = self.bdp_bytes / total_streams.max(1.0);
+        w / (w + THRASH_MSS * self.profile.mss_bytes)
+    }
+
+    /// Stream-bookkeeping overhead factor for `s` own streams.
+    pub fn sys_factor(&self, s: f64) -> f64 {
+        1.0 / (1.0 + SYS_OVERHEAD_A * s.powf(1.5))
+    }
+
+    /// Streams needed to saturate the bottleneck at base loss.
+    pub fn saturation_streams(&self) -> f64 {
+        self.s_sat
+    }
+
+    /// Aggregate overload goodput factor: opening streams far beyond
+    /// the saturation point floods the bottleneck queue — RTT inflates,
+    /// retransmissions burn capacity, and *everyone's* goodput decays
+    /// exponentially in the overload ratio.  Scaled by RTT: long-RTT
+    /// paths pay full price (loss recovery is slow), LAN-RTT paths
+    /// barely notice.  This is the mechanism that makes statically
+    /// aggressive parameter choices (the paper's HARP-in-contention
+    /// case, §5.4) hurt, and gives heavy-load surfaces their moderate
+    /// optima.
+    pub fn overload_factor(&self, total_streams: f64) -> f64 {
+        let ratio = total_streams / self.s_sat;
+        (-self.gamma * (ratio - 1.0).max(0.0)).exp()
+    }
+
+    /// Steady-state end-to-end throughput in Mbps.
+    pub fn steady(&self, params: Params, dataset: &Dataset, load: &LoadState) -> f64 {
+        let p = &self.profile;
+        let params = params.clamp(p.max_param);
+        let s = params.total_streams() as f64;
+        let total = s + load.bg_streams;
+
+        // (1)-(2) per-stream rate under congestion-pressure loss
+        let lambda = self.pressure_loss(total);
+        let r = tcp::stream_rate_mbps(p, lambda);
+
+        // (3) aggregate: own streams vs TCP-fair share of the bottleneck
+        let share = p.bandwidth_mbps * s / total.max(1.0);
+        let mut agg = (s * r).min(share).min(p.bandwidth_mbps);
+
+        // (4) window thrash on low-BDP paths + aggregate overload
+        agg *= self.thrash_factor(total);
+        agg *= self.overload_factor(total);
+
+        // (5) end-system: stream bookkeeping, cores, disk, NIC
+        agg *= self.sys_factor(s);
+        if params.cc > p.cores {
+            agg *= (p.cores as f64 / params.cc as f64).powf(0.4);
+        }
+        agg = agg.min(p.disk_mbps).min(p.nic_mbps);
+
+        // (6) control-channel (pipelining) factor, per channel
+        let files_per_ch = (dataset.n_files as f64 / params.cc as f64).max(1.0);
+        let ch_rate = agg / params.cc as f64; // Mbps per channel
+        let data_time_per_file = dataset.avg_file_mb * 8.0 / ch_rate.max(1e-9);
+        let pp_eff = (params.pp as f64).min(files_per_ch).max(1.0);
+        let ack_time_per_file =
+            p.rtt_s / pp_eff + PP_SLOT_COST * params.pp as f64 * p.rtt_s;
+        let ctrl_factor = data_time_per_file / (data_time_per_file + ack_time_per_file);
+
+        // (7) parallelism fragmentation on small files
+        let frag_factor =
+            dataset.avg_file_mb / (dataset.avg_file_mb + (params.p as f64 - 1.0) * FRAG_MB);
+
+        agg * ctrl_factor * frag_factor
+    }
+
+    /// One *measured* throughput sample: steady state with lognormal
+    /// measurement/route noise (the deviation the paper's Gaussian
+    /// confidence regions absorb, Fig 4a).
+    pub fn sample(
+        &self,
+        params: Params,
+        dataset: &Dataset,
+        load: &LoadState,
+        rng: &mut Rng,
+    ) -> f64 {
+        let th = self.steady(params, dataset, load);
+        th * rng.lognormal(0.0, SAMPLE_SIGMA)
+    }
+
+    /// Dead time charged when switching `from -> to` mid-transfer:
+    /// process startup for new channels plus slow-start ramp for every
+    /// newly-opened stream's share (§4.2: "if a cc value changes from 2
+    /// to 4, this algorithm has to open two more server processes ...
+    /// new processes have to go through TCP slow start").
+    pub fn param_change_penalty_s(&self, from: Params, to: Params) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let p = &self.profile;
+        let new_procs = to.cc.saturating_sub(from.cc) as f64;
+        let new_streams = to.total_streams().saturating_sub(from.total_streams()) as f64;
+        let proc_cost = 0.10 * new_procs; // fork + auth + channel setup
+        let lambda = self.pressure_loss(to.total_streams() as f64);
+        let r = tcp::stream_rate_mbps(p, lambda);
+        let ss = tcp::slow_start_penalty_s(p, r) * new_streams.min(16.0);
+        // pipelining-only changes are nearly free
+        proc_cost + ss
+    }
+
+    /// True optimum over the bounded integer domain Ψ³ by exhaustive
+    /// scan (ground truth for accuracy experiments; the paper can only
+    /// estimate this on real networks).
+    pub fn true_optimum(&self, dataset: &Dataset, load: &LoadState) -> (Params, f64) {
+        let grid = [1u32, 2, 3, 4, 6, 8, 12, 16, 24, 32];
+        let mut best = (Params::DEFAULT, 0.0);
+        for &cc in &grid {
+            for &p in &grid {
+                for &pp in &grid {
+                    let params = Params::new(cc, p, pp);
+                    let th = self.steady(params, dataset, load);
+                    if th > best.1 {
+                        best = (params, th);
+                    }
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::traffic::TrafficProcess;
+
+    fn setup(name: &str) -> (ThroughputModel, LoadState) {
+        let p = NetProfile::by_name(name).unwrap();
+        let l = TrafficProcess::fixed(&p, 0.2);
+        (ThroughputModel::new(p), l)
+    }
+
+    fn large() -> Dataset {
+        Dataset::new(64, 1024.0)
+    }
+
+    fn small() -> Dataset {
+        Dataset::new(20_000, 1.0)
+    }
+
+    #[test]
+    fn throughput_never_exceeds_link_or_disk() {
+        for name in ["xsede", "didclab", "didclab-xsede", "chameleon"] {
+            let (m, l) = setup(name);
+            for cc in [1u32, 4, 16, 32] {
+                for p in [1u32, 4, 16] {
+                    for pp in [1u32, 8, 32] {
+                        let th = m.steady(Params::new(cc, p, pp), &large(), &l);
+                        assert!(th >= 0.0);
+                        assert!(th <= m.profile.bandwidth_mbps + 1e-9);
+                        assert!(th <= m.profile.disk_mbps + 1e-9);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_streams_help_on_long_rtt() {
+        let (m, l) = setup("xsede");
+        let one = m.steady(Params::new(1, 1, 4), &large(), &l);
+        let many = m.steady(Params::new(8, 4, 4), &large(), &l);
+        assert!(many > 3.0 * one, "one={one} many={many}");
+    }
+
+    #[test]
+    fn excessive_streams_hurt() {
+        // interior maximum: th at β_max below the best interior point
+        let (m, l) = setup("didclab-xsede");
+        let best = m.true_optimum(&large(), &l).1;
+        let maxed = m.steady(Params::new(32, 32, 4), &large(), &l);
+        assert!(
+            maxed < 0.9 * best,
+            "no interior max: maxed={maxed} best={best}"
+        );
+    }
+
+    #[test]
+    fn pipelining_dominates_small_files() {
+        let (m, l) = setup("xsede");
+        let no_pp = m.steady(Params::new(4, 1, 1), &small(), &l);
+        let pp = m.steady(Params::new(4, 1, 16), &small(), &l);
+        assert!(pp > 2.0 * no_pp, "no_pp={no_pp} pp={pp}");
+    }
+
+    #[test]
+    fn pipelining_irrelevant_for_large_files() {
+        let (m, l) = setup("xsede");
+        let a = m.steady(Params::new(4, 4, 1), &large(), &l);
+        let b = m.steady(Params::new(4, 4, 16), &large(), &l);
+        assert!((a - b).abs() / a < 0.05, "a={a} b={b}");
+    }
+
+    #[test]
+    fn parallelism_hurts_small_files() {
+        let (m, l) = setup("xsede");
+        let p1 = m.steady(Params::new(8, 1, 16), &small(), &l);
+        let p8 = m.steady(Params::new(8, 8, 16), &small(), &l);
+        assert!(p1 > p8, "p1={p1} p8={p8}");
+    }
+
+    #[test]
+    fn higher_background_load_lowers_throughput() {
+        let p = NetProfile::xsede();
+        let m = ThroughputModel::new(p.clone());
+        let light = TrafficProcess::fixed(&p, 0.05);
+        let heavy = TrafficProcess::fixed(&p, 0.9);
+        let params = Params::new(8, 4, 8);
+        let th_l = m.steady(params, &large(), &light);
+        let th_h = m.steady(params, &large(), &heavy);
+        assert!(th_h < 0.8 * th_l, "light={th_l} heavy={th_h}");
+    }
+
+    #[test]
+    fn optimum_shifts_with_load() {
+        let p = NetProfile::didclab_xsede();
+        let m = ThroughputModel::new(p.clone());
+        let light = TrafficProcess::fixed(&p, 0.05);
+        let heavy = TrafficProcess::fixed(&p, 0.95);
+        let (opt_l, _) = m.true_optimum(&large(), &light);
+        let (opt_h, _) = m.true_optimum(&large(), &heavy);
+        assert_ne!(
+            opt_l, opt_h,
+            "optimal params should depend on external load"
+        );
+    }
+
+    #[test]
+    fn pressure_loss_monotone_in_streams() {
+        let (m, _) = setup("xsede");
+        let mut prev = 0.0;
+        for &streams in &[1.0, 16.0, 64.0, 256.0, 1024.0] {
+            let lam = m.pressure_loss(streams);
+            assert!(lam >= prev - 1e-15, "loss must not drop with pressure");
+            assert!(lam >= m.profile.base_loss && lam <= 0.5);
+            prev = lam;
+        }
+    }
+
+    #[test]
+    fn thrash_negligible_on_high_bdp_paths() {
+        let (mx, _) = setup("xsede"); // BDP 50 MB
+        assert!(mx.thrash_factor(1036.0) > 0.97);
+        let (md, _) = setup("didclab"); // BDP 25 KB
+        assert!(md.thrash_factor(16.0) < 0.75);
+    }
+
+    #[test]
+    fn sampled_noise_is_centred() {
+        let (m, l) = setup("xsede");
+        let mut rng = Rng::new(5);
+        let params = Params::new(8, 4, 8);
+        let truth = m.steady(params, &large(), &l);
+        let n = 500;
+        let mean: f64 = (0..n)
+            .map(|_| m.sample(params, &large(), &l, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean / truth - 1.0).abs() < 0.03, "mean={mean} truth={truth}");
+    }
+
+    #[test]
+    fn param_change_penalty_shape() {
+        let (m, _) = setup("xsede");
+        let same = m.param_change_penalty_s(Params::new(4, 4, 4), Params::new(4, 4, 4));
+        assert_eq!(same, 0.0);
+        let pp_only = m.param_change_penalty_s(Params::new(4, 4, 4), Params::new(4, 4, 16));
+        let grow = m.param_change_penalty_s(Params::new(4, 4, 4), Params::new(8, 4, 4));
+        let shrink = m.param_change_penalty_s(Params::new(8, 4, 4), Params::new(4, 4, 4));
+        assert!(pp_only < 0.01, "pp change should be ~free: {pp_only}");
+        assert!(grow > 0.3, "new processes must cost: {grow}");
+        assert!(shrink < grow, "shrinking is cheaper than growing");
+    }
+
+    #[test]
+    fn didclab_is_disk_bound() {
+        let (m, l) = setup("didclab");
+        let (_, best) = m.true_optimum(&large(), &l);
+        assert!(best <= m.profile.disk_mbps + 1e-9);
+        assert!(best > 0.6 * m.profile.disk_mbps, "best={best}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser (clap is unavailable offline — DESIGN.md §4).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("transfer dataset1 dataset2");
+        assert_eq!(a.subcommand.as_deref(), Some("transfer"));
+        assert_eq!(a.positional, vec!["dataset1", "dataset2"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("run --seed 42 --profile=xsede");
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get("profile"), Some("xsede"));
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("run --verbose --out file.json");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("out"), Some("file.json"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("run --dry-run");
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("run --alpha 0.5");
+        assert_eq!(a.get_f64("alpha", 1.0), 0.5);
+        assert_eq!(a.get_f64("beta", 2.0), 2.0);
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

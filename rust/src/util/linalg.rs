@@ -1,0 +1,299 @@
+//! Small dense linear algebra: Thomas tridiagonal solver (natural-spline
+//! systems), partial-pivot LU (regression normal equations), and
+//! least-squares fitting.  Matrices are row-major `Vec<f64>`.
+
+/// Solve a tridiagonal system in O(n).
+///
+/// `sub[i]` multiplies x[i-1] in row i (sub[0] ignored), `diag[i]` x[i],
+/// `sup[i]` x[i+1] (sup[n-1] ignored).  Panics on size mismatch,
+/// returns None when a pivot collapses.
+pub fn thomas(sub: &[f64], diag: &[f64], sup: &[f64], rhs: &[f64]) -> Option<Vec<f64>> {
+    let n = diag.len();
+    assert!(sub.len() == n && sup.len() == n && rhs.len() == n);
+    if n == 0 {
+        return Some(vec![]);
+    }
+    let mut cp = vec![0.0; n];
+    let mut dp = vec![0.0; n];
+    if diag[0].abs() < 1e-300 {
+        return None;
+    }
+    cp[0] = sup[0] / diag[0];
+    dp[0] = rhs[0] / diag[0];
+    for i in 1..n {
+        let denom = diag[i] - sub[i] * cp[i - 1];
+        if denom.abs() < 1e-300 {
+            return None;
+        }
+        cp[i] = sup[i] / denom;
+        dp[i] = (rhs[i] - sub[i] * dp[i - 1]) / denom;
+    }
+    let mut x = vec![0.0; n];
+    x[n - 1] = dp[n - 1];
+    for i in (0..n - 1).rev() {
+        x[i] = dp[i] - cp[i] * x[i + 1];
+    }
+    Some(x)
+}
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// A^T * A (for normal equations).
+    pub fn gram(&self) -> Mat {
+        let mut g = Mat::zeros(self.cols, self.cols);
+        for i in 0..self.cols {
+            for j in i..self.cols {
+                let mut s = 0.0;
+                for r in 0..self.rows {
+                    s += self.at(r, i) * self.at(r, j);
+                }
+                g.set(i, j, s);
+                g.set(j, i, s);
+            }
+        }
+        g
+    }
+
+    /// A^T * b.
+    pub fn t_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c] += self.at(r, c) * b[r];
+            }
+        }
+        out
+    }
+
+    /// A * x.
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let mut s = 0.0;
+            for c in 0..self.cols {
+                s += self.at(r, c) * x[c];
+            }
+            out[r] = s;
+        }
+        out
+    }
+}
+
+/// Solve A x = b by partial-pivot LU.  None if singular.
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols, "lu_solve needs a square matrix");
+    assert_eq!(b.len(), a.rows);
+    let n = a.rows;
+    let mut m = a.data.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = m[col * n + col].abs();
+        for r in col + 1..n {
+            let v = m[r * n + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                m.swap(col * n + c, piv * n + c);
+            }
+            x.swap(col, piv);
+        }
+        let d = m[col * n + col];
+        for r in col + 1..n {
+            let f = m[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                m[r * n + c] -= f * m[col * n + c];
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // back substitution
+    for r in (0..n).rev() {
+        let mut s = x[r];
+        for c in r + 1..n {
+            s -= m[r * n + c] * x[c];
+        }
+        x[r] = s / m[r * n + r];
+    }
+    Some(x)
+}
+
+/// Least squares: minimize ||A x - b||² via ridge-stabilized normal
+/// equations (tiny λ keeps rank-deficient design matrices solvable).
+pub fn least_squares(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let mut g = a.gram();
+    let lambda = 1e-12
+        * (0..g.rows)
+            .map(|i| g.at(i, i))
+            .fold(0.0, f64::max)
+            .max(1e-12);
+    for i in 0..g.rows {
+        let v = g.at(i, i) + lambda;
+        g.set(i, i, v);
+    }
+    let atb = a.t_vec(b);
+    lu_solve(&g, &atb)
+}
+
+/// 2x2 symmetric eigenvalues (for the Hessian definiteness test).
+pub fn sym2_eigenvalues(a: f64, b: f64, d: f64) -> (f64, f64) {
+    // matrix [[a, b], [b, d]]
+    let tr = a + d;
+    let det = a * d - b * b;
+    let disc = (tr * tr / 4.0 - det).max(0.0).sqrt();
+    (tr / 2.0 - disc, tr / 2.0 + disc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn thomas_known_system() {
+        // [[2,1,0],[1,2,1],[0,1,2]] x = [4,8,8] -> x = [1,2,3]
+        let x = thomas(
+            &[0.0, 1.0, 1.0],
+            &[2.0, 2.0, 2.0],
+            &[1.0, 1.0, 0.0],
+            &[4.0, 8.0, 8.0],
+        )
+        .unwrap();
+        close(&x, &[1.0, 2.0, 3.0], 1e-12);
+    }
+
+    #[test]
+    fn thomas_size_one_and_empty() {
+        close(
+            &thomas(&[0.0], &[4.0], &[0.0], &[8.0]).unwrap(),
+            &[2.0],
+            1e-12,
+        );
+        assert_eq!(thomas(&[], &[], &[], &[]).unwrap(), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn thomas_singular_is_none() {
+        assert!(thomas(&[0.0], &[0.0], &[0.0], &[1.0]).is_none());
+    }
+
+    #[test]
+    fn lu_solves_random_system() {
+        let a = Mat::from_rows(&[
+            vec![4.0, -2.0, 1.0],
+            vec![3.0, 6.0, -4.0],
+            vec![2.0, 1.0, 8.0],
+        ]);
+        let x_true = [1.0, -2.0, 0.5];
+        let b = a.mul_vec(&x_true);
+        let x = lu_solve(&a, &b).unwrap();
+        close(&x, &x_true, 1e-10);
+    }
+
+    #[test]
+    fn lu_needs_pivoting() {
+        let a = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let x = lu_solve(&a, &[3.0, 7.0]).unwrap();
+        close(&x, &[7.0, 3.0], 1e-12);
+    }
+
+    #[test]
+    fn lu_singular_is_none() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(lu_solve(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn least_squares_recovers_line() {
+        // y = 3 + 2x fitted from noisy-free samples
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let rows: Vec<Vec<f64>> = xs.iter().map(|&x| vec![1.0, x]).collect();
+        let a = Mat::from_rows(&rows);
+        let b: Vec<f64> = xs.iter().map(|&x| 3.0 + 2.0 * x).collect();
+        let c = least_squares(&a, &b).unwrap();
+        close(&c, &[3.0, 2.0], 1e-6);
+    }
+
+    #[test]
+    fn least_squares_overdetermined() {
+        // quadratic through >3 points
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let rows: Vec<Vec<f64>> = xs.iter().map(|&x| vec![1.0, x, x * x]).collect();
+        let a = Mat::from_rows(&rows);
+        let b: Vec<f64> = xs.iter().map(|&x| 1.0 - x + 0.5 * x * x).collect();
+        let c = least_squares(&a, &b).unwrap();
+        close(&c, &[1.0, -1.0, 0.5], 1e-6);
+    }
+
+    #[test]
+    fn sym2_eigs() {
+        let (lo, hi) = sym2_eigenvalues(2.0, 0.0, 3.0);
+        assert!((lo - 2.0).abs() < 1e-12 && (hi - 3.0).abs() < 1e-12);
+        // negative definite
+        let (lo, hi) = sym2_eigenvalues(-2.0, 1.0, -2.0);
+        assert!(lo < 0.0 && hi < 0.0);
+    }
+
+    #[test]
+    fn gram_symmetry() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let g = a.gram();
+        assert_eq!(g.at(0, 1), g.at(1, 0));
+        assert!((g.at(0, 0) - 35.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree infrastructure replacing crates that are unresolvable in this
+//! offline environment (see `DESIGN.md §4`): seeded RNG, JSON, CLI
+//! parsing, statistics, small-matrix linear algebra, a property-testing
+//! mini-framework and a wallclock bench harness.
+
+pub mod cli;
+pub mod json;
+pub mod linalg;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

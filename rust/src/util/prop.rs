@@ -1,0 +1,198 @@
+//! Property-testing mini-framework (proptest is unavailable offline —
+//! DESIGN.md §4).
+//!
+//! A property is a closure over a [`Gen`] (a seeded value source); the
+//! runner executes it for many cases and, on failure, re-runs with a
+//! reduced `size` budget to report the smallest failing scale it can
+//! find (coarse-grained shrinking).
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries miss the xla rpath in this image
+//! use twophase::util::prop::{run, Gen};
+//! run("reverse twice is identity", 100, |g| {
+//!     let v = g.vec_f64(0..=32, -1e3..1e3);
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::{Range, RangeInclusive};
+
+/// Seeded generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// scale knob in (0, 1]; shrink passes reduce it
+    pub size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn f64_in(&mut self, range: Range<f64>) -> f64 {
+        self.rng.uniform(range.start, range.end)
+    }
+
+    /// Integer in an inclusive range, biased small by the size budget.
+    pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.index(span.max(0) + 1)
+    }
+
+    pub fn u32_in(&mut self, range: RangeInclusive<u32>) -> u32 {
+        self.usize_in(*range.start() as usize..=*range.end() as usize) as u32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec_f64(&mut self, len: RangeInclusive<usize>, range: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(range.clone())).collect()
+    }
+
+    /// Strictly increasing knot vector of length n with steps in [0.25, 2].
+    pub fn knots(&mut self, n: usize) -> Vec<f64> {
+        let mut xs = Vec::with_capacity(n);
+        let mut x = self.f64_in(0.5..2.0);
+        for _ in 0..n {
+            xs.push(x);
+            x += self.f64_in(0.25..2.0);
+        }
+        xs
+    }
+}
+
+/// Run `cases` random cases of the property.  Panics (failing the test)
+/// with seed + case details on the first failure, after attempting a
+/// smaller-size reproduction.
+pub fn run<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u32, prop: F) {
+    run_seeded(name, 0xC0FFEE, cases, prop)
+}
+
+/// As [`run`] but with an explicit base seed (quoted in failure output).
+pub fn run_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    base_seed: u64,
+    cases: u32,
+    prop: F,
+) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let outcome = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 1.0);
+            prop(&mut g);
+        });
+        if let Err(panic) = outcome {
+            // coarse shrink: try progressively smaller size budgets with
+            // the same seed and report the smallest that still fails.
+            let mut smallest: Option<f64> = None;
+            for &size in &[0.1, 0.25, 0.5] {
+                let again = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, size);
+                    prop(&mut g);
+                });
+                if again.is_err() {
+                    smallest = Some(size);
+                    break;
+                }
+            }
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, \
+                 min failing size {:?}): {msg}",
+                smallest.unwrap_or(1.0)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run("abs is nonnegative", 200, |g| {
+            let x = g.f64_in(-100.0..100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        run("bounds", 200, |g| {
+            let n = g.usize_in(2..=9);
+            assert!((2..=9).contains(&n));
+            let v = g.vec_f64(1..=5, 0.0..1.0);
+            assert!(!v.is_empty() && v.len() <= 5);
+            assert!(v.iter().all(|x| (0.0..1.0).contains(x)));
+        });
+    }
+
+    #[test]
+    fn knots_strictly_increasing() {
+        run("knots", 100, |g| {
+            let ks = g.knots(8);
+            assert!(ks.windows(2).all(|w| w[1] > w[0]));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            run("always fails", 5, |_| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first = Vec::new();
+        run_seeded("collect", 0xABCD, 3, |g| {
+            // not a real property; we just confirm determinism by
+            // recreating the generator stream manually below.
+            let _ = g.f64_in(0.0..1.0);
+        });
+        for case in 0..3u64 {
+            let seed = 0xABCDu64
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(case);
+            let mut g = Gen::new(seed, 1.0);
+            first.push(g.f64_in(0.0..1.0));
+        }
+        let second: Vec<f64> = (0..3u64)
+            .map(|case| {
+                let seed = 0xABCDu64
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add(case);
+                let mut g = Gen::new(seed, 1.0);
+                g.f64_in(0.0..1.0)
+            })
+            .collect();
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,218 @@
+//! Descriptive statistics used across the offline phase (Gaussian
+//! confidence regions), the monitors (EWMA) and the experiment
+//! harnesses (percentiles, Jain fairness index).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation (Eq 14 of the paper uses 1/N).
+pub fn std_pop(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Sample standard deviation (1/(N-1)).
+pub fn std_sample(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Jain's fairness index: (Σx)² / (n·Σx²) ∈ (0, 1]; 1 = perfectly fair.
+/// Used for the §5.4 multi-user fairness analysis.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 == 0.0 {
+        return 1.0;
+    }
+    s * s / (xs.len() as f64 * s2)
+}
+
+/// Exponentially-weighted moving average with deviation tracking — the
+/// online monitor's persistent-change detector builds on this.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+    /// EWMA of |sample - value| (mean absolute deviation).
+    dev: f64,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma {
+            alpha,
+            value: None,
+            dev: 0.0,
+        }
+    }
+
+    pub fn update(&mut self, sample: f64) -> f64 {
+        match self.value {
+            None => {
+                self.value = Some(sample);
+                sample
+            }
+            Some(v) => {
+                self.dev = (1.0 - self.alpha) * self.dev + self.alpha * (sample - v).abs();
+                let nv = (1.0 - self.alpha) * v + self.alpha * sample;
+                self.value = Some(nv);
+                nv
+            }
+        }
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn deviation(&self) -> f64 {
+        self.dev
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+        self.dev = 0.0;
+    }
+}
+
+/// Equal-width histogram over [lo, hi] — Fig 4(a) needs one.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x < lo || x > hi {
+            continue;
+        }
+        let b = (((x - lo) / w) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    counts
+}
+
+/// Gaussian pdf (Eq 12).
+pub fn gaussian_pdf(x: f64, mu: f64, sigma: f64) -> f64 {
+    if sigma <= 0.0 {
+        return if (x - mu).abs() < 1e-12 { f64::INFINITY } else { 0.0 };
+    }
+    let z = (x - mu) / sigma;
+    (-0.5 * z * z).exp() / (sigma * (2.0 * std::f64::consts::PI).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_pop(&xs) - 2.0).abs() < 1e-12);
+        assert!(std_sample(&xs) > std_pop(&xs));
+    }
+
+    #[test]
+    fn empty_slices_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_pop(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(jain_index(&[]), 1.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn jain() {
+        assert!((jain_index(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        // one user hogging everything among 4 -> 1/4
+        assert!((jain_index(&[1.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.3);
+        for _ in 0..100 {
+            e.update(10.0);
+        }
+        assert!((e.value().unwrap() - 10.0).abs() < 1e-6);
+        assert!(e.deviation() < 1e-6);
+    }
+
+    #[test]
+    fn ewma_deviation_reflects_noise() {
+        let mut e = Ewma::new(0.2);
+        let mut flip = 1.0;
+        for _ in 0..200 {
+            e.update(10.0 + flip);
+            flip = -flip;
+        }
+        assert!(e.deviation() > 0.5);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let xs = [0.1, 0.2, 0.9, 0.55, 2.0];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]); // 2.0 out of range, 0.55 & 0.9 in bin 1
+    }
+
+    #[test]
+    fn gaussian_peak_at_mu() {
+        let p0 = gaussian_pdf(5.0, 5.0, 2.0);
+        assert!(p0 > gaussian_pdf(6.0, 5.0, 2.0));
+        assert!((p0 - 1.0 / (2.0 * (2.0 * std::f64::consts::PI).sqrt())).abs() < 1e-12);
+    }
+}

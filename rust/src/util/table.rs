@@ -1,0 +1,115 @@
+//! ASCII table rendering for the experiment benches: the `exp_*`
+//! binaries print the same rows/series the paper's tables and figures
+//! report, and this keeps them legible.
+
+/// A simple left-aligned-text / right-aligned-number table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+\n";
+        out.push_str(&sep);
+        out.push('|');
+        for i in 0..ncol {
+            out.push_str(&format!(" {:<w$} |", self.header[i], w = widths[i]));
+        }
+        out.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push('|');
+            for (i, c) in row.iter().enumerate() {
+                // right-align numeric-looking cells
+                let numeric = c
+                    .trim_start_matches('-')
+                    .chars()
+                    .all(|ch| ch.is_ascii_digit() || ch == '.' || ch == 'x' || ch == '%');
+                if numeric && !c.is_empty() {
+                    out.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+                } else {
+                    out.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+                }
+            }
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a throughput in Mbps with sensible precision.
+pub fn fmt_mbps(v: f64) -> String {
+    if v >= 1000.0 {
+        format!("{:.2}", v / 1000.0) + " Gbps"
+    } else {
+        format!("{v:.1} Mbps")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["model", "thr"]);
+        t.row_strs(&["ASM", "950.0"]);
+        t.row_strs(&["HARP", "550.123"]);
+        let s = t.render();
+        assert!(s.contains("| model"));
+        assert!(s.contains("ASM"));
+        let lines: Vec<&str> = s.lines().collect();
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "ragged table:\n{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn mbps_formatting() {
+        assert_eq!(fmt_mbps(123.45), "123.5 Mbps");
+        assert_eq!(fmt_mbps(2500.0), "2.50 Gbps");
+    }
+}

@@ -1,0 +1,95 @@
+//! Wallclock bench harness (criterion is unavailable offline —
+//! DESIGN.md §4).  The `rust/benches/*.rs` binaries (`harness = false`)
+//! use [`bench`] for timed sections and print criterion-style summary
+//! lines: median with p10/p90 spread over N timed iterations after a
+//! warmup.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} iters={:<4} median={:>12?} p10={:>12?} p90={:>12?}",
+            self.name, self.iters, self.median, self.p10, self.p90
+        )
+    }
+
+    /// Median in nanoseconds (for throughput math in perf logs).
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+fn percentile_dur(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+/// Returns per-iteration statistics and prints the summary line.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean_ns: u128 = samples.iter().map(|d| d.as_nanos()).sum::<u128>() / iters as u128;
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        median: percentile_dur(&samples, 0.5),
+        p10: percentile_dur(&samples, 0.1),
+        p90: percentile_dur(&samples, 0.9),
+        mean: Duration::from_nanos(mean_ns as u64),
+    };
+    println!("{}", res.line());
+    res
+}
+
+/// Time a single run of `f` and return (result, elapsed).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", 2, 20, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.p10 <= r.median && r.median <= r.p90);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,112 @@
+//! End-to-end integration: the orchestrator serving the full model
+//! matrix, asserting the paper's headline *shapes* (who wins, by
+//! roughly what factor) on the shared experiment context.
+//!
+//! Quick settings so the suite stays single-core friendly.
+
+use twophase::baselines::api::OptimizerKind;
+use twophase::coordinator::orchestrator::TransferRequest;
+use twophase::experiments::common::{ctx, OFFPEAK_PHASE_S};
+use twophase::sim::dataset::Dataset;
+use twophase::sim::profile::NetProfile;
+use twophase::util::stats;
+
+fn init_quick() {
+    // keep the shared context small for CI-style runs
+    if std::env::var("TWOPHASE_DAYS").is_err() {
+        std::env::set_var("TWOPHASE_DAYS", "7");
+    }
+}
+
+fn mean_throughput(model: OptimizerKind, dataset: &Dataset, net: &str, reps: u64) -> f64 {
+    let c = ctx();
+    let ths: Vec<f64> = (0..reps)
+        .map(|rep| {
+            let req = TransferRequest {
+                id: rep,
+                profile: NetProfile::by_name(net).unwrap(),
+                dataset: dataset.clone(),
+                model,
+                seed: 0xE2E ^ rep,
+                phase_s: OFFPEAK_PHASE_S,
+            };
+            c.orchestrator.execute(&req).avg_throughput_mbps
+        })
+        .collect();
+    stats::mean(&ths)
+}
+
+#[test]
+fn asm_beats_default_by_large_factor() {
+    init_quick();
+    let d = Dataset::new(64, 512.0);
+    let asm = mean_throughput(OptimizerKind::Asm, &d, "xsede", 3);
+    let noopt = mean_throughput(OptimizerKind::NoOpt, &d, "xsede", 3);
+    assert!(
+        asm > 3.0 * noopt,
+        "ASM {asm:.0} should be >3x NoOpt {noopt:.0} (paper: ~5x)"
+    );
+}
+
+#[test]
+fn asm_beats_globus_static() {
+    init_quick();
+    let d = Dataset::new(64, 512.0);
+    let asm = mean_throughput(OptimizerKind::Asm, &d, "xsede", 3);
+    let go = mean_throughput(OptimizerKind::Globus, &d, "xsede", 3);
+    assert!(asm > 1.3 * go, "ASM {asm:.0} vs GO {go:.0}");
+}
+
+#[test]
+fn asm_at_least_matches_harp_on_every_class() {
+    init_quick();
+    for (files, avg) in [(20_000u64, 1.0), (512, 64.0), (64, 512.0)] {
+        let d = Dataset::new(files, avg);
+        let asm = mean_throughput(OptimizerKind::Asm, &d, "xsede", 3);
+        let harp = mean_throughput(OptimizerKind::Harp, &d, "xsede", 3);
+        assert!(
+            asm > 0.9 * harp,
+            "class avg={avg}: ASM {asm:.0} vs HARP {harp:.0}"
+        );
+    }
+}
+
+#[test]
+fn every_model_completes_on_every_network() {
+    init_quick();
+    let d = Dataset::new(128, 64.0);
+    for net in ["xsede", "didclab", "didclab-xsede"] {
+        for model in OptimizerKind::all() {
+            let th = mean_throughput(model, &d, net, 1);
+            assert!(
+                th > 0.0,
+                "{} on {net} produced no throughput",
+                model.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn asm_sampling_overhead_is_small() {
+    init_quick();
+    let c = ctx();
+    let req = TransferRequest {
+        id: 0,
+        profile: NetProfile::xsede(),
+        dataset: Dataset::new(64, 512.0),
+        model: OptimizerKind::Asm,
+        seed: 4,
+        phase_s: OFFPEAK_PHASE_S,
+    };
+    let r = c.orchestrator.execute(&req);
+    assert!(r.sample_transfers <= 4, "{} samples", r.sample_transfers);
+    // total transfer throughput within 30% of the steady phase: the
+    // sampling head must not dominate
+    assert!(
+        r.avg_throughput_mbps > 0.7 * r.steady_throughput_mbps,
+        "avg {:.0} vs steady {:.0}",
+        r.avg_throughput_mbps,
+        r.steady_throughput_mbps
+    );
+}

@@ -1,0 +1,155 @@
+//! Integration: the offline phase recovers the simulator's ground
+//! truth from generated history — clustering separates contexts, load
+//! buckets order correctly, surface optima land near the true optima.
+
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::sim::dataset::{Dataset, FileSizeClass};
+use twophase::sim::profile::NetProfile;
+use twophase::sim::traffic::TrafficProcess;
+use twophase::sim::transfer::ThroughputModel;
+use std::sync::OnceLock;
+
+fn kb() -> &'static KnowledgeBase {
+    static KB: OnceLock<KnowledgeBase> = OnceLock::new();
+    KB.get_or_init(|| {
+        let mut logs = Vec::new();
+        for p in [NetProfile::xsede(), NetProfile::didclab_xsede()] {
+            logs.extend(generate_history(
+                &p,
+                &GeneratorConfig {
+                    days: 14.0,
+                    transfers_per_hour: 10.0,
+                    seed: 99,
+                },
+            ));
+        }
+        KnowledgeBase::build_native(logs, OfflineConfig::default())
+    })
+}
+
+#[test]
+fn clusters_and_classes_are_separated() {
+    let kb = kb();
+    assert!(kb.clustering.k >= 2);
+    // every (network, class) query should resolve to a set of the
+    // right class
+    for p in [NetProfile::xsede(), NetProfile::didclab_xsede()] {
+        for (favg, class) in [
+            (1.0, FileSizeClass::Small),
+            (64.0, FileSizeClass::Medium),
+            (1024.0, FileSizeClass::Large),
+        ] {
+            let set = kb.query(p.rtt_s, p.bandwidth_mbps, favg, 256).unwrap();
+            assert_eq!(set.class, class, "{} favg={favg}", p.name);
+        }
+    }
+}
+
+#[test]
+fn surface_optimum_is_near_true_optimum() {
+    let kb = kb();
+    let p = NetProfile::xsede();
+    let model = ThroughputModel::new(p.clone());
+    let dataset = Dataset::new(64, 512.0);
+
+    let set = kb
+        .query(p.rtt_s, p.bandwidth_mbps, dataset.avg_file_mb, dataset.n_files)
+        .unwrap();
+    // compare each bucket's recommendation against the true optimum at
+    // the bucket's true mean load: recommended params must achieve a
+    // large fraction of the optimal throughput
+    let mut checked = 0;
+    for b in &set.buckets {
+        let load = TrafficProcess::fixed(&p, b.true_intensity);
+        let (_, best) = model.true_optimum(&dataset, &load);
+        let achieved = model.steady(b.optimal_params, &dataset, &load);
+        if best > 0.0 {
+            let frac = achieved / best;
+            assert!(
+                frac > 0.55,
+                "bucket {}: {} achieves only {:.0}% of optimal",
+                b.bucket,
+                b.optimal_params,
+                frac * 100.0
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 2, "too few buckets to validate");
+}
+
+#[test]
+fn bucket_peaks_decrease_with_load_overall() {
+    let kb = kb();
+    let mut ordered = 0usize;
+    let mut total = 0usize;
+    for set in &kb.sets {
+        if set.buckets.len() >= 2 {
+            total += 1;
+            let first = set.buckets.first().unwrap();
+            let last = set.buckets.last().unwrap();
+            if last.optimal_th <= first.optimal_th * 1.1 {
+                ordered += 1;
+            }
+        }
+    }
+    assert!(total > 0);
+    assert!(
+        ordered * 3 >= total * 2,
+        "only {ordered}/{total} sets show load-ordered peaks"
+    );
+}
+
+#[test]
+fn additive_update_improves_or_keeps_coverage() {
+    let mut logs = generate_history(
+        &NetProfile::xsede(),
+        &GeneratorConfig {
+            days: 8.0,
+            transfers_per_hour: 8.0,
+            seed: 5,
+        },
+    );
+    let extra = generate_history(
+        &NetProfile::xsede(),
+        &GeneratorConfig {
+            days: 4.0,
+            transfers_per_hour: 8.0,
+            seed: 6,
+        },
+    );
+    let mut kb = KnowledgeBase::build_native(logs.clone(), OfflineConfig::default());
+    let before = kb.n_surfaces();
+    let before_entries = kb.n_entries();
+    kb.update(
+        extra.clone(),
+        &twophase::offline::surface::NativeSurfaceBackend,
+    );
+    assert_eq!(kb.n_entries(), before_entries + extra.len());
+    assert!(
+        kb.n_surfaces() + 2 >= before,
+        "surfaces dropped: {} -> {}",
+        before,
+        kb.n_surfaces()
+    );
+    logs.extend(extra);
+}
+
+#[test]
+fn sampling_regions_exist_and_are_in_domain() {
+    let kb = kb();
+    for set in &kb.sets {
+        assert!(
+            !set.sampling.is_empty(),
+            "cluster {} class {:?} has no sampling region",
+            set.cluster,
+            set.class
+        );
+        for q in &set.sampling {
+            assert!((1..=32).contains(&q.params.cc));
+            assert!((1..=32).contains(&q.params.p));
+            assert!((1..=32).contains(&q.params.pp));
+        }
+    }
+}

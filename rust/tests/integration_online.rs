@@ -1,0 +1,131 @@
+//! Integration: the online phase (ASM + monitor) against the live
+//! simulator — convergence speed, re-tuning on load change, and the
+//! end-to-end advantage over static choices.
+
+use std::sync::OnceLock;
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::online::asm::AsmPhase;
+use twophase::online::controller::DynamicTuner;
+use twophase::sim::dataset::Dataset;
+use twophase::sim::engine::SimEnv;
+use twophase::sim::profile::NetProfile;
+use twophase::Params;
+
+fn kb() -> &'static KnowledgeBase {
+    static KB: OnceLock<KnowledgeBase> = OnceLock::new();
+    KB.get_or_init(|| {
+        let logs = generate_history(
+            &NetProfile::xsede(),
+            &GeneratorConfig {
+                days: 14.0,
+                transfers_per_hour: 10.0,
+                seed: 31,
+            },
+        );
+        KnowledgeBase::build_native(logs, OfflineConfig::default())
+    })
+}
+
+fn tuner_for(dataset: &Dataset) -> DynamicTuner {
+    let p = NetProfile::xsede();
+    let set = kb()
+        .query(p.rtt_s, p.bandwidth_mbps, dataset.avg_file_mb, dataset.n_files)
+        .expect("kb has surfaces")
+        .clone();
+    DynamicTuner::with_defaults(set)
+}
+
+#[test]
+fn asm_converges_within_log2_buckets() {
+    let dataset = Dataset::new(64, 512.0);
+    let mut tuner = tuner_for(&dataset);
+    let budget = tuner.asm().max_samples();
+    let mut env = SimEnv::new(NetProfile::xsede(), 11).with_phase(3.0 * 3600.0);
+    let mut prev: Option<Params> = None;
+    let mut steps = 0;
+    while tuner.phase() == AsmPhase::Sampling && steps < 20 {
+        let params = tuner.params();
+        let chunk = dataset.sample_chunk(0.01);
+        let (th, _) = env.transfer_chunk(params, &chunk, prev);
+        tuner.observe(th);
+        prev = Some(params);
+        steps += 1;
+    }
+    assert_eq!(tuner.phase(), AsmPhase::Streaming);
+    assert!(
+        tuner.samples_used() <= budget,
+        "{} samples > budget {budget}",
+        tuner.samples_used()
+    );
+    assert!(budget <= 4, "bucket count should keep the budget tiny");
+}
+
+#[test]
+fn asm_transfer_beats_default_by_2x() {
+    let dataset = Dataset::new(64, 512.0);
+    let mut env_a = SimEnv::new(NetProfile::xsede(), 21).with_phase(3.0 * 3600.0);
+    let mut tuner = tuner_for(&dataset);
+    let asm_out = env_a.run_transfer(&dataset, 1024.0, |_, ctx| match ctx.last_throughput {
+        None => tuner.params(),
+        Some(th) => tuner.observe(th),
+    });
+    let mut env_b = SimEnv::new(NetProfile::xsede(), 21).with_phase(3.0 * 3600.0);
+    let def_out = env_b.run_transfer(&dataset, 1024.0, |_, _| Params::DEFAULT);
+    assert!(
+        asm_out.avg_throughput_mbps() > 2.0 * def_out.avg_throughput_mbps(),
+        "ASM {:.0} vs default {:.0}",
+        asm_out.avg_throughput_mbps(),
+        def_out.avg_throughput_mbps()
+    );
+}
+
+#[test]
+fn asm_retunes_on_harsh_load_change() {
+    let dataset = Dataset::new(256, 256.0);
+    let mut tuner = tuner_for(&dataset);
+    // converge under honest feedback first
+    let mut env = SimEnv::new(NetProfile::xsede(), 33).with_phase(3.0 * 3600.0);
+    let mut prev = None;
+    for _ in 0..4 {
+        let params = tuner.params();
+        let (th, _) = env.transfer_chunk(params, &dataset.sample_chunk(0.01), prev);
+        tuner.observe(th);
+        prev = Some(params);
+    }
+    assert_eq!(tuner.phase(), AsmPhase::Streaming);
+    let before = tuner.asm().current_bucket();
+    // harsh, persistent throughput collapse (external surge)
+    for _ in 0..8 {
+        tuner.observe(50.0);
+    }
+    assert!(tuner.retunes >= 1, "no re-tune after sustained collapse");
+    assert!(
+        tuner.asm().current_bucket() >= before,
+        "should have moved to a heavier bucket"
+    );
+}
+
+#[test]
+fn asm_prediction_accuracy_is_high_after_convergence() {
+    let dataset = Dataset::new(64, 512.0);
+    let mut accs = Vec::new();
+    for seed in 0..5u64 {
+        let mut tuner = tuner_for(&dataset);
+        let mut env = SimEnv::new(NetProfile::xsede(), 100 + seed).with_phase(3.0 * 3600.0);
+        let mut prev = None;
+        for _ in 0..4 {
+            let params = tuner.params();
+            let (th, _) = env.transfer_chunk(params, &dataset.sample_chunk(0.01), prev);
+            tuner.observe(th);
+            prev = Some(params);
+        }
+        // measure a validation chunk at the converged operating point
+        let params = tuner.params();
+        let (th, _) = env.transfer_chunk(params, &dataset.sample_chunk(0.02), prev);
+        let acc = twophase::coordinator::metrics::accuracy_pct(th, tuner.predicted());
+        accs.push(acc);
+    }
+    let mean = twophase::util::stats::mean(&accs);
+    assert!(mean > 75.0, "mean converged accuracy {mean:.1}% too low");
+}

@@ -1,0 +1,100 @@
+//! Integration: the three-layer AOT path.  When `make artifacts` has
+//! run, the PJRT backends must agree with the native math on real
+//! offline workloads; tests skip (never fail) from a clean checkout.
+
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::offline::kmeans::NativeKmeans;
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::offline::surface::NativeSurfaceBackend;
+use twophase::runtime::accel::{PjrtKmeans, PjrtSurfaceBackend};
+use twophase::runtime::engine::Engine;
+use twophase::sim::profile::NetProfile;
+
+fn logs() -> Vec<twophase::logs::schema::LogEntry> {
+    generate_history(
+        &NetProfile::xsede(),
+        &GeneratorConfig {
+            days: 8.0,
+            transfers_per_hour: 8.0,
+            seed: 77,
+        },
+    )
+}
+
+#[test]
+fn pjrt_knowledge_base_matches_native_structure() {
+    let Some(engine) = Engine::try_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let corpus = logs();
+    let native = KnowledgeBase::build(
+        corpus.clone(),
+        OfflineConfig::default(),
+        &NativeSurfaceBackend,
+        &NativeKmeans,
+    );
+    let backend = PjrtSurfaceBackend::new(engine);
+    let pjrt = KnowledgeBase::build(
+        corpus,
+        OfflineConfig::default(),
+        &backend,
+        &NativeKmeans,
+    );
+    assert_eq!(native.n_surfaces(), pjrt.n_surfaces());
+    assert_eq!(native.sets.len(), pjrt.sets.len());
+    // bucket optima agree closely (f32 artifacts vs f64 native)
+    for (a, b) in native.sets.iter().zip(&pjrt.sets) {
+        assert_eq!(a.buckets.len(), b.buckets.len());
+        for (ba, bb) in a.buckets.iter().zip(&b.buckets) {
+            let rel = (ba.optimal_th - bb.optimal_th).abs() / ba.optimal_th.max(1.0);
+            assert!(
+                rel < 5e-3,
+                "bucket optimum drifted: {} vs {}",
+                ba.optimal_th,
+                bb.optimal_th
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_kmeans_clusters_like_native() {
+    let Some(engine) = Engine::try_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let corpus = logs();
+    let refs: Vec<&twophase::logs::schema::LogEntry> = corpus.iter().collect();
+    let native = twophase::offline::clustering::cluster_logs(&refs, 4, 3, &NativeKmeans);
+    let accel = twophase::offline::clustering::cluster_logs(
+        &refs,
+        4,
+        3,
+        &PjrtKmeans::new(engine),
+    );
+    // same seeding + identical assignment steps -> identical result
+    assert_eq!(native.k, accel.k);
+    assert_eq!(native.labels, accel.labels);
+}
+
+#[test]
+fn engine_surface_pipeline_is_deterministic() {
+    let Some(engine) = Engine::try_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = &engine.manifest;
+    let (s, gp, gc) = (
+        m.konst("S").unwrap(),
+        m.konst("GP").unwrap(),
+        m.konst("GC").unwrap(),
+    );
+    let xs: Vec<f32> = (0..gp).map(|i| (i + 1) as f32).collect();
+    let ys: Vec<f32> = (0..gc).map(|i| (i + 1) as f32).collect();
+    let values: Vec<f32> = (0..s * gp * gc).map(|i| ((i * 31) % 211) as f32).collect();
+    let a = engine.surface_pipeline(&xs, &ys, &values).unwrap();
+    let b = engine.surface_pipeline(&xs, &ys, &values).unwrap();
+    assert_eq!(a.coeffs, b.coeffs);
+    assert_eq!(a.maxv, b.maxv);
+}

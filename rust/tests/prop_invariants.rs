@@ -1,0 +1,179 @@
+//! Property-based invariants across the stack, run through the in-tree
+//! `util::prop` framework (proptest is unavailable offline).
+
+use twophase::offline::spline::BicubicSurface;
+use twophase::offline::surface::SurfaceGrid;
+use twophase::sim::dataset::Dataset;
+use twophase::sim::link::{share_bottleneck, LinkDemand};
+use twophase::sim::profile::NetProfile;
+use twophase::sim::traffic::TrafficProcess;
+use twophase::sim::transfer::ThroughputModel;
+use twophase::util::prop::run;
+use twophase::util::stats;
+use twophase::Params;
+
+#[test]
+fn prop_throughput_within_physical_bounds() {
+    run("throughput within bounds", 150, |g| {
+        let profiles = NetProfile::all();
+        let p = profiles[g.usize_in(0..=3)].clone();
+        let model = ThroughputModel::new(p.clone());
+        let load = TrafficProcess::fixed(&p, g.f64_in(0.0..1.0));
+        let params = Params::new(g.u32_in(1..=32), g.u32_in(1..=32), g.u32_in(1..=32));
+        let dataset = Dataset::new(g.usize_in(1..=50_000) as u64, g.f64_in(0.1..4096.0));
+        let th = model.steady(params, &dataset, &load);
+        assert!(th >= 0.0, "negative throughput");
+        assert!(th <= p.bandwidth_mbps + 1e-9, "exceeds link");
+        assert!(th <= p.disk_mbps + 1e-9, "exceeds disk");
+        assert!(th.is_finite());
+    });
+}
+
+#[test]
+fn prop_throughput_monotone_in_background_load() {
+    run("throughput non-increasing in load", 60, |g| {
+        let p = NetProfile::xsede();
+        let model = ThroughputModel::new(p.clone());
+        let params = Params::new(g.u32_in(1..=16), g.u32_in(1..=8), g.u32_in(1..=32));
+        let dataset = Dataset::new(256, g.f64_in(1.0..1024.0));
+        let mut prev = f64::INFINITY;
+        for step in 0..6 {
+            let load = TrafficProcess::fixed(&p, step as f64 / 5.0);
+            let th = model.steady(params, &dataset, &load);
+            assert!(
+                th <= prev * 1.0001,
+                "throughput rose with load at step {step}: {th} > {prev}"
+            );
+            prev = th;
+        }
+    });
+}
+
+#[test]
+fn prop_spline_interpolates_every_random_grid() {
+    run("bicubic interpolation", 60, |g| {
+        let gp = g.usize_in(3..=8);
+        let gc = g.usize_in(3..=8);
+        let xs = g.knots(gp);
+        let ys = g.knots(gc);
+        let values: Vec<Vec<f64>> = (0..gp)
+            .map(|_| (0..gc).map(|_| g.f64_in(-500.0..500.0)).collect())
+            .collect();
+        let s = BicubicSurface::fit(&xs, &ys, &values);
+        for i in 0..gp {
+            for j in 0..gc {
+                let got = s.eval(xs[i], ys[j]);
+                assert!(
+                    (got - values[i][j]).abs() < 1e-6,
+                    "knot ({i},{j}): {got} vs {}",
+                    values[i][j]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_surface_grid_fill_is_complete_and_bounded() {
+    run("grid fill", 80, |g| {
+        let n = g.usize_in(1..=40);
+        let grid_vals = [1u32, 2, 4, 6, 8, 12, 16, 32];
+        let obs: Vec<(Params, f64)> = (0..n)
+            .map(|_| {
+                (
+                    Params::new(
+                        grid_vals[g.usize_in(0..=7)],
+                        grid_vals[g.usize_in(0..=7)],
+                        4,
+                    ),
+                    g.f64_in(1.0..1000.0),
+                )
+            })
+            .collect();
+        let grid = SurfaceGrid::from_observations(&obs);
+        let lo = obs.iter().map(|(_, v)| *v).fold(f64::INFINITY, f64::min);
+        let hi = obs.iter().map(|(_, v)| *v).fold(0.0, f64::max);
+        for row in &grid.values {
+            for &v in row {
+                assert!(v.is_finite(), "unfilled cell");
+                // neighbor averaging never escapes the observed range
+                assert!(v >= lo - 1e-9 && v <= hi + 1e-9, "{v} outside [{lo},{hi}]");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bottleneck_share_conserves_capacity() {
+    run("water-fill conservation", 120, |g| {
+        let n = g.usize_in(1..=8);
+        let cap = g.f64_in(100.0..10_000.0);
+        let demands: Vec<LinkDemand> = (0..n)
+            .map(|_| LinkDemand {
+                streams: g.f64_in(1.0..64.0),
+                demand_mbps: g.f64_in(1.0..20_000.0),
+            })
+            .collect();
+        let bg = g.f64_in(0.0..64.0);
+        let alloc = share_bottleneck(cap, &demands, bg);
+        let total: f64 = alloc.iter().sum();
+        assert!(total <= cap + 1e-6, "oversubscribed: {total} > {cap}");
+        for (a, d) in alloc.iter().zip(&demands) {
+            assert!(*a >= -1e-9 && *a <= d.demand_mbps + 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_four_equal_users_share_fairly() {
+    run("fair share under symmetry", 20, |g| {
+        use twophase::sim::multiuser::{MultiUserSim, UserCtx, UserPolicy};
+        let params = Params::new(g.u32_in(2..=16), g.u32_in(1..=8), 8);
+        struct Fixed(Params);
+        impl UserPolicy for Fixed {
+            fn decide(&mut self, _c: &UserCtx) -> Params {
+                self.0
+            }
+        }
+        let mut sim = MultiUserSim::new(NetProfile::chameleon(), g.rng().next_u64());
+        let mut pols: Vec<Box<dyn UserPolicy>> =
+            (0..4).map(|_| Box::new(Fixed(params)) as Box<dyn UserPolicy>).collect();
+        let ds = vec![Dataset::new(256, 512.0); 4];
+        let out = sim.run(&mut pols, &ds, 120.0);
+        let means: Vec<f64> = out.iter().map(|u| u.mean_throughput_mbps).collect();
+        let jain = stats::jain_index(&means);
+        assert!(jain > 0.95, "jain {jain} for identical users: {means:?}");
+    });
+}
+
+#[test]
+fn prop_log_entries_roundtrip_json() {
+    run("log JSON roundtrip", 100, |g| {
+        let e = twophase::logs::schema::LogEntry {
+            timestamp_s: g.f64_in(0.0..4e6),
+            network: "xsede".into(),
+            rtt_s: g.f64_in(1e-4..0.2),
+            bandwidth_mbps: g.f64_in(100.0..1e5),
+            avg_file_mb: g.f64_in(0.1..4096.0),
+            n_files: g.usize_in(1..=100_000) as u64,
+            params: Params::new(g.u32_in(1..=32), g.u32_in(1..=32), g.u32_in(1..=32)),
+            throughput_mbps: g.f64_in(0.1..1e4),
+            true_load: g.f64_in(0.0..1.0),
+        };
+        let back = twophase::logs::schema::LogEntry::from_json(&e.to_json()).unwrap();
+        assert_eq!(e, back);
+    });
+}
+
+#[test]
+fn prop_param_change_penalty_nonnegative_and_zero_on_identity() {
+    run("penalty sanity", 100, |g| {
+        let p = NetProfile::xsede();
+        let model = ThroughputModel::new(p);
+        let a = Params::new(g.u32_in(1..=32), g.u32_in(1..=32), g.u32_in(1..=32));
+        let b = Params::new(g.u32_in(1..=32), g.u32_in(1..=32), g.u32_in(1..=32));
+        assert_eq!(model.param_change_penalty_s(a, a), 0.0);
+        let pen = model.param_change_penalty_s(a, b);
+        assert!(pen >= 0.0 && pen < 60.0, "penalty {pen}");
+    });
+}
