@@ -1,0 +1,15 @@
+//! Regenerates the fault-injection robustness sweep: recovered
+//! throughput fraction vs fault intensity, two-phase (ASM) against the
+//! GO/SC/HARP static baselines.  `harness = false`.
+
+fn main() {
+    let (res, elapsed) = twophase::util::timer::time_once(|| {
+        twophase::experiments::robustness::run()
+    });
+    let levels = twophase::experiments::robustness::INTENSITIES.len();
+    println!(
+        "[bench] exp_robustness completed in {elapsed:?} (ASM wins {}/{} levels)",
+        res.asm_win_levels(),
+        levels
+    );
+}

@@ -1,8 +1,10 @@
 //! Layer-3 coordination: the deployable transfer service.
 //!
-//! * [`scheduler`] — chunk sizing and sample-transfer budgeting;
+//! * [`scheduler`] — chunk sizing, sample-transfer budgeting, and the
+//!   retry-with-exponential-backoff policy for faulted chunks;
 //! * [`state`] — the per-transfer state machine (queued → sampling →
-//!   streaming → retuning → done) with transition validation;
+//!   streaming → retuning/recovering → done) with transition
+//!   validation;
 //! * [`metrics`] — the Eq-21 accuracy metric and report aggregation;
 //! * [`fairness`] — the §3 centralized-scheduler variant (global view)
 //!   next to the default distributed mode;
@@ -18,6 +20,8 @@ pub mod scheduler;
 pub mod state;
 
 pub use metrics::{accuracy_pct, TransferReport};
-pub use orchestrator::{Orchestrator, OrchestratorConfig, TransferRequest};
-pub use scheduler::ChunkPlan;
+pub use orchestrator::{
+    Checkpoint, Orchestrator, OrchestratorConfig, RecoveryReport, TransferRequest,
+};
+pub use scheduler::{ChunkPlan, RetryPolicy};
 pub use state::TransferState;

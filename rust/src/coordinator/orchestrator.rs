@@ -14,10 +14,11 @@ use crate::baselines::static_ann::{StaticAnn, StaticAnnModel};
 use crate::coordinator::metrics::TransferReport;
 use crate::coordinator::scheduler::{plan_chunks, SchedulerConfig};
 use crate::coordinator::state::TransferState;
+use crate::faults::FaultPlan;
 use crate::offline::pipeline::KnowledgeBase;
 use crate::online::controller::{DynamicTuner, TunerConfig};
 use crate::sim::dataset::Dataset;
-use crate::sim::engine::{ChunkSample, SimEnv, TransferOutcome};
+use crate::sim::engine::{ChunkFault, ChunkSample, SimEnv, TransferOutcome};
 use crate::sim::profile::NetProfile;
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -52,6 +53,35 @@ impl Default for OrchestratorConfig {
             sampling_chunks: 6,
         }
     }
+}
+
+/// Mid-transfer progress snapshot.  Chunk transfers are atomic in the
+/// simulator, so the checkpoint sits at the last completed chunk
+/// boundary; a failed attempt retries the same chunk with the same
+/// remaining bytes — completed work is never re-sent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Checkpoint {
+    /// chunks completed so far (also the index of the chunk to retry)
+    pub chunk_idx: usize,
+    pub transferred_mb: f64,
+    pub remaining_mb: f64,
+}
+
+/// A [`TransferReport`] plus the recovery trace accumulated by
+/// [`Orchestrator::execute_with_faults`].
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    pub report: TransferReport,
+    /// failed chunk attempts that were retried
+    pub retries: usize,
+    /// wall clock spent waiting in exponential backoff
+    pub backoff_total_s: f64,
+    /// chunks that completed after at least one failed attempt
+    pub resumed_chunks: usize,
+    /// false when some chunk exhausted its retry budget (→ `Failed`)
+    pub completed: bool,
+    /// final progress snapshot (remaining_mb > 0 iff not completed)
+    pub checkpoint: Checkpoint,
 }
 
 /// The transfer service.
@@ -120,21 +150,53 @@ impl Orchestrator {
 
     /// Run one transfer to completion (synchronous).
     pub fn execute(&self, req: &TransferRequest) -> TransferReport {
+        self.execute_with_faults(req, None).report
+    }
+
+    /// Run one transfer under an optional fault schedule, with
+    /// checkpoint/resume and retry-with-backoff around failed chunk
+    /// attempts.  With `fault_plan = None` this is exactly
+    /// [`Orchestrator::execute`].
+    ///
+    /// Recovery loop per chunk: an [`ChunkFault::EndpointStall`] burns
+    /// the detection timeout, then the scheduler's [`RetryPolicy`]
+    /// schedules exponentially-backed-off retries of the *same* chunk
+    /// (the checkpoint keeps completed bytes).  Once a retried chunk
+    /// goes through, an ASM transfer re-queries the knowledge base and
+    /// restarts the bisection — the paper's re-tuning path — because
+    /// post-fault conditions rarely match the pre-fault surface.
+    /// Exhausting the budget marks the transfer `Failed` and returns
+    /// the partial report.
+    ///
+    /// [`RetryPolicy`]: crate::coordinator::scheduler::RetryPolicy
+    pub fn execute_with_faults(
+        &self,
+        req: &TransferRequest,
+        fault_plan: Option<FaultPlan>,
+    ) -> RecoveryReport {
         let mut env = SimEnv::new(req.profile.clone(), req.seed).with_phase(req.phase_s);
+        if let Some(plan) = fault_plan {
+            env = env.with_faults(plan);
+        }
         let mut optimizer = self.build_optimizer(req);
         let mut state = TransferState::Queued;
         state.transition(TransferState::Sampling);
 
         let expected = req.profile.bandwidth_mbps / 4.0;
         let plan = plan_chunks(&req.profile, &req.dataset, expected, &self.cfg.scheduler);
+        let retry = self.cfg.scheduler.retry.clone();
 
         let total_mb = req.dataset.total_mb();
         let start = env.now_s;
         let mut remaining = total_mb;
+        let mut transferred = 0.0f64;
         let mut samples: Vec<ChunkSample> = Vec::new();
         let mut last_th: Option<f64> = None;
         let mut prev_params: Option<crate::Params> = None;
         let mut idx = 0usize;
+        let mut retries = 0usize;
+        let mut backoff_total_s = 0.0f64;
+        let mut resumed_chunks = 0usize;
 
         while remaining > 1e-9 {
             if idx == self.cfg.sampling_chunks && state == TransferState::Sampling {
@@ -151,7 +213,41 @@ impl Orchestrator {
             let params = optimizer
                 .next_params(last_th)
                 .clamp(req.profile.max_param);
-            let (th, dur) = env.transfer_chunk(params, &chunk, prev_params);
+
+            // retry-with-backoff loop: the chunk (and the bytes behind
+            // it) is the checkpoint unit
+            let mut attempt = 1usize;
+            let attempt_result = loop {
+                match env.try_transfer_chunk(params, &chunk, prev_params) {
+                    Ok(ok) => break Some(ok),
+                    Err(ChunkFault::EndpointStall { .. }) => {
+                        if state != TransferState::Recovering {
+                            state.transition(TransferState::Recovering);
+                        }
+                        if attempt >= retry.max_attempts {
+                            break None;
+                        }
+                        let wait = retry.backoff_s(attempt);
+                        env.now_s += wait;
+                        backoff_total_s += wait;
+                        retries += 1;
+                        attempt += 1;
+                    }
+                }
+            };
+            let Some((th, _dur)) = attempt_result else {
+                state.transition(TransferState::Failed);
+                break;
+            };
+            let recovered = state == TransferState::Recovering;
+            if recovered {
+                resumed_chunks += 1;
+                state.transition(if idx < self.cfg.sampling_chunks {
+                    TransferState::Sampling
+                } else {
+                    TransferState::Streaming
+                });
+            }
             samples.push(ChunkSample {
                 t_s: env.now_s - start,
                 params,
@@ -161,29 +257,52 @@ impl Orchestrator {
                     .map(|q| env.model.param_change_penalty_s(q, params))
                     .unwrap_or(0.0),
             });
-            let _ = dur;
             remaining -= chunk_mb;
-            last_th = Some(th);
+            transferred += chunk_mb;
+            if recovered && req.model == OptimizerKind::Asm {
+                // confirmed fault: re-query the knowledge base and
+                // restart the ASM bisection on current conditions
+                optimizer = self.build_optimizer(req);
+                last_th = None;
+            } else {
+                last_th = Some(th);
+            }
             prev_params = Some(params);
             idx += 1;
         }
-        if state == TransferState::Sampling {
-            state.transition(TransferState::Streaming);
+
+        let completed = state != TransferState::Failed;
+        if completed {
+            if state == TransferState::Sampling {
+                state.transition(TransferState::Streaming);
+            }
+            state.transition(TransferState::Done);
         }
-        state.transition(TransferState::Done);
 
         let outcome = TransferOutcome {
-            total_mb,
+            total_mb: transferred,
             duration_s: env.now_s - start,
             samples,
         };
-        TransferReport::from_outcome(
+        let report = TransferReport::from_outcome(
             optimizer.name(),
             req.profile.name,
             &outcome,
             optimizer.predicted_th(),
             optimizer.samples_used().min(self.cfg.sampling_chunks),
-        )
+        );
+        RecoveryReport {
+            report,
+            retries,
+            backoff_total_s,
+            resumed_chunks,
+            completed,
+            checkpoint: Checkpoint {
+                chunk_idx: idx,
+                transferred_mb: transferred,
+                remaining_mb: remaining.max(0.0),
+            },
+        }
     }
 
     /// Fan a request batch out to `cfg.workers` worker threads.
@@ -325,5 +444,85 @@ mod tests {
     #[test]
     fn empty_batch() {
         assert!(orchestrator().run_batch(vec![]).is_empty());
+    }
+
+    fn stall(t_start_s: f64, duration_s: f64) -> crate::faults::FaultPlan {
+        crate::faults::FaultPlan {
+            events: vec![crate::faults::FaultEvent {
+                kind: crate::faults::FaultKind::EndpointStall,
+                t_start_s,
+                duration_s,
+                magnitude: 1.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn faultless_plan_matches_plain_execute() {
+        let orch = orchestrator();
+        let req = request(3, OptimizerKind::Asm);
+        let plain = orch.execute(&req);
+        let rr = orch.execute_with_faults(&req, Some(crate::faults::FaultPlan::empty()));
+        assert!(rr.completed);
+        assert_eq!(rr.retries, 0);
+        assert_eq!(rr.resumed_chunks, 0);
+        assert_eq!(rr.backoff_total_s, 0.0);
+        assert_eq!(rr.report.avg_throughput_mbps, plain.avg_throughput_mbps);
+        assert_eq!(rr.report.final_params, plain.final_params);
+        assert!(rr.checkpoint.remaining_mb < 1e-6);
+    }
+
+    #[test]
+    fn stall_recovery_retries_with_backoff_then_resumes() {
+        let orch = orchestrator();
+        let req = request(4, OptimizerKind::Asm);
+        // stall covers [0, 20): attempts at t = 0, 7, 16 fail (each
+        // burns the 5 s detection timeout, then backs off 2/4/8 s);
+        // the fourth attempt at t = 29 goes through
+        let rr = orch.execute_with_faults(&req, Some(stall(0.0, 20.0)));
+        assert!(rr.completed);
+        assert_eq!(rr.retries, 3);
+        assert_eq!(rr.backoff_total_s, 2.0 + 4.0 + 8.0);
+        assert_eq!(rr.resumed_chunks, 1);
+        // resume, not restart: every byte is delivered exactly once
+        assert!((rr.report.total_mb - req.dataset.total_mb()).abs() < 1e-6);
+        assert!(rr.checkpoint.remaining_mb < 1e-6);
+        assert!((rr.checkpoint.transferred_mb - req.dataset.total_mb()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_cleanly() {
+        let orch = orchestrator();
+        let req = request(5, OptimizerKind::Asm);
+        // permanent stall from t = 0: all 5 attempts fail, no data moves
+        let rr = orch.execute_with_faults(&req, Some(stall(0.0, 1e9)));
+        assert!(!rr.completed);
+        assert_eq!(rr.retries, 4); // 5 attempts = 4 retries
+        assert_eq!(rr.backoff_total_s, 2.0 + 4.0 + 8.0 + 16.0);
+        assert_eq!(rr.checkpoint.chunk_idx, 0);
+        assert_eq!(rr.checkpoint.transferred_mb, 0.0);
+        assert!((rr.checkpoint.remaining_mb - req.dataset.total_mb()).abs() < 1e-6);
+        assert_eq!(rr.report.avg_throughput_mbps, 0.0);
+        assert!(rr.report.duration_s > 0.0, "dead time is still charged");
+    }
+
+    #[test]
+    fn mid_transfer_stall_keeps_completed_chunks() {
+        let orch = orchestrator();
+        // NoOpt moves one slow chunk (> 30 s) before hitting the
+        // permanent stall, so the checkpoint must hold partial progress
+        let req = request(6, OptimizerKind::NoOpt);
+        let rr = orch.execute_with_faults(&req, Some(stall(30.0, 1e9)));
+        assert!(!rr.completed);
+        assert!(rr.checkpoint.chunk_idx >= 1);
+        assert!(rr.checkpoint.transferred_mb > 0.0);
+        assert!(
+            (rr.checkpoint.transferred_mb + rr.checkpoint.remaining_mb
+                - req.dataset.total_mb())
+            .abs()
+                < 1e-6,
+            "checkpoint partitions the dataset exactly"
+        );
+        assert_eq!(rr.report.total_mb, rr.checkpoint.transferred_mb);
     }
 }

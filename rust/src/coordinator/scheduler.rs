@@ -17,6 +17,46 @@ pub struct ChunkPlan {
     pub stream_chunk_mb: f64,
 }
 
+/// Retry-with-exponential-backoff schedule for failed chunk attempts
+/// (endpoint stalls, sample-transfer failures).  Deterministic: no
+/// jitter, so identically-seeded runs recover identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// attempts per chunk before the transfer is declared failed
+    pub max_attempts: usize,
+    /// wait before the first retry
+    pub base_backoff_s: f64,
+    /// backoff growth per retry
+    pub multiplier: f64,
+    /// ceiling on any single wait
+    pub max_backoff_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 5,
+            base_backoff_s: 2.0,
+            multiplier: 2.0,
+            max_backoff_s: 60.0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (1-based: the wait after
+    /// the first failure is `backoff_s(1) = base`).
+    pub fn backoff_s(&self, attempt: usize) -> f64 {
+        let exp = attempt.saturating_sub(1) as f64;
+        (self.base_backoff_s * self.multiplier.powf(exp)).min(self.max_backoff_s)
+    }
+
+    /// Total dead time if every allowed retry is consumed.
+    pub fn worst_case_backoff_s(&self) -> f64 {
+        (1..self.max_attempts).map(|a| self.backoff_s(a)).sum()
+    }
+}
+
 /// Scheduler configuration.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
@@ -27,6 +67,8 @@ pub struct SchedulerConfig {
     pub max_sample_frac: f64,
     /// desired seconds between streaming-phase decisions
     pub target_decision_s: f64,
+    /// chunk-failure retry schedule
+    pub retry: RetryPolicy,
 }
 
 impl Default for SchedulerConfig {
@@ -36,6 +78,7 @@ impl Default for SchedulerConfig {
             min_sample_mb: 64.0,
             max_sample_frac: 0.05,
             target_decision_s: 15.0,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -95,6 +138,47 @@ mod tests {
         assert!(fast.stream_chunk_mb > slow.stream_chunk_mb);
         // ~15 s of data at 8 Gbps = 15 GB
         assert!((fast.stream_chunk_mb - 15_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn backoff_grows_exponentially() {
+        let r = RetryPolicy::default();
+        assert_eq!(r.backoff_s(1), 2.0);
+        assert_eq!(r.backoff_s(2), 4.0);
+        assert_eq!(r.backoff_s(3), 8.0);
+        assert_eq!(r.backoff_s(4), 16.0);
+        for a in 1..10 {
+            assert!(r.backoff_s(a + 1) >= r.backoff_s(a));
+        }
+    }
+
+    #[test]
+    fn backoff_is_capped() {
+        let r = RetryPolicy::default();
+        assert_eq!(r.backoff_s(6), 60.0); // 2·2⁵ = 64 > cap
+        assert_eq!(r.backoff_s(50), 60.0);
+        let tight = RetryPolicy {
+            max_backoff_s: 3.0,
+            ..RetryPolicy::default()
+        };
+        assert_eq!(tight.backoff_s(1), 2.0);
+        assert_eq!(tight.backoff_s(2), 3.0);
+    }
+
+    #[test]
+    fn worst_case_sums_the_schedule() {
+        let r = RetryPolicy::default();
+        // 2 + 4 + 8 + 16 between 5 attempts
+        assert_eq!(r.worst_case_backoff_s(), 30.0);
+    }
+
+    #[test]
+    fn backoff_is_deterministic() {
+        let a = RetryPolicy::default();
+        let b = RetryPolicy::default();
+        for attempt in 1..20 {
+            assert_eq!(a.backoff_s(attempt), b.backoff_s(attempt));
+        }
     }
 
     #[test]

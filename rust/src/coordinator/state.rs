@@ -14,6 +14,9 @@ pub enum TransferState {
     Streaming,
     /// persistent deviation detected; re-selecting a surface
     Retuning,
+    /// a chunk attempt failed (endpoint stall / fault); retrying with
+    /// backoff from the last checkpoint
+    Recovering,
     Done,
     Failed,
 }
@@ -27,12 +30,17 @@ impl TransferState {
             (Queued, Sampling)
                 | (Queued, Failed)
                 | (Sampling, Streaming)
+                | (Sampling, Recovering)
                 | (Sampling, Failed)
                 | (Streaming, Retuning)
+                | (Streaming, Recovering)
                 | (Streaming, Done)
                 | (Streaming, Failed)
                 | (Retuning, Streaming)
                 | (Retuning, Failed)
+                | (Recovering, Sampling)
+                | (Recovering, Streaming)
+                | (Recovering, Failed)
         )
     }
 
@@ -73,6 +81,26 @@ mod tests {
         assert!(!Done.can_transition(Sampling));
         assert!(!Sampling.can_transition(Retuning));
         assert!(!Failed.can_transition(Queued));
+        assert!(!Queued.can_transition(Recovering));
+        assert!(!Recovering.can_transition(Done));
+        assert!(!Done.can_transition(Recovering));
+    }
+
+    #[test]
+    fn recovery_paths() {
+        // stall mid-stream, recover, finish
+        let mut s = Queued;
+        s.transition(Sampling);
+        s.transition(Streaming);
+        s.transition(Recovering);
+        s.transition(Streaming);
+        s.transition(Done);
+        // stall during sampling, give up
+        let mut s = Queued;
+        s.transition(Sampling);
+        s.transition(Recovering);
+        s.transition(Failed);
+        assert!(s.is_terminal());
     }
 
     #[test]

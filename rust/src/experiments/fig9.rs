@@ -51,11 +51,13 @@ impl Fig9Result {
 const USERS: usize = 4;
 const DURATION_S: f64 = 600.0;
 
-fn policies_for(model: OptimizerKind, dataset: &Dataset) -> Vec<Box<dyn UserPolicy>> {
+/// Policies for one model, or None for models fig9 does not evaluate
+/// (the per-chunk optimizers have no multi-user policy form here).
+fn policies_for(model: OptimizerKind, dataset: &Dataset) -> Option<Vec<Box<dyn UserPolicy>>> {
     let c = ctx();
     let profile = NetProfile::chameleon();
     (0..USERS)
-        .map(|_u| -> Box<dyn UserPolicy> {
+        .map(|_u| -> Option<Box<dyn UserPolicy>> {
             match model {
                 OptimizerKind::Asm => {
                     let set = c
@@ -68,16 +70,16 @@ fn policies_for(model: OptimizerKind, dataset: &Dataset) -> Vec<Box<dyn UserPoli
                         )
                         .expect("kb has surfaces")
                         .clone();
-                    Box::new(DynamicTuner::with_defaults(set))
+                    Some(Box::new(DynamicTuner::with_defaults(set)))
                 }
                 OptimizerKind::Harp => {
-                    Box::new(PolicyAdapter(Harp::plan(&profile, dataset)))
+                    Some(Box::new(PolicyAdapter(Harp::plan(&profile, dataset))))
                 }
                 OptimizerKind::Globus => {
-                    Box::new(PolicyAdapter(Globus::for_dataset(dataset)))
+                    Some(Box::new(PolicyAdapter(Globus::for_dataset(dataset))))
                 }
-                OptimizerKind::NoOpt => Box::new(move |_: &_| Params::DEFAULT),
-                other => panic!("fig9 does not evaluate {other:?}"),
+                OptimizerKind::NoOpt => Some(Box::new(move |_: &_| Params::DEFAULT)),
+                _ => None,
             }
         })
         .collect()
@@ -95,7 +97,13 @@ pub fn run() -> Fig9Result {
     let mut rows = Vec::new();
     for model in models {
         let mut sim = MultiUserSim::new(NetProfile::chameleon(), 0x519);
-        let mut pols = policies_for(model, &dataset);
+        let Some(mut pols) = policies_for(model, &dataset) else {
+            eprintln!(
+                "fig9: skipping {} — no multi-user policy form for this model",
+                model.label()
+            );
+            continue;
+        };
         let ds = vec![dataset.clone(); USERS];
         let out = sim.run(&mut pols, &ds, DURATION_S);
         let per_user: Vec<f64> = out.iter().map(|u| u.mean_throughput_mbps).collect();

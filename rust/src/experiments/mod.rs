@@ -13,4 +13,5 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod robustness;
 pub mod table1;

@@ -1,0 +1,231 @@
+//! Folding a [`FaultPlan`] into the effective network condition at an
+//! instant, and deriving degraded profiles/loads for the sim hooks.
+
+use crate::faults::plan::{FaultEvent, FaultKind, FaultPlan};
+use crate::sim::profile::NetProfile;
+use crate::sim::traffic::LoadState;
+
+/// Effective fault condition at some instant: the identity state (no
+/// active events) is `Default`. Overlapping events combine as
+/// documented on [`FaultEngine::state_at`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultState {
+    /// Multiplies bottleneck capacity (1 = healthy, < 1 = degraded).
+    pub capacity_factor: f64,
+    /// Added to the path's packet-loss probability.
+    pub extra_loss: f64,
+    /// Multiplies RTT (1 = healthy, > 1 = inflated).
+    pub rtt_factor: f64,
+    /// Extra contending background streams at the bottleneck.
+    pub extra_bg_streams: f64,
+    /// When Some, the endpoint is unresponsive until this absolute time.
+    pub stalled_until_s: Option<f64>,
+}
+
+impl Default for FaultState {
+    fn default() -> Self {
+        FaultState {
+            capacity_factor: 1.0,
+            extra_loss: 0.0,
+            rtt_factor: 1.0,
+            extra_bg_streams: 0.0,
+            stalled_until_s: None,
+        }
+    }
+}
+
+impl FaultState {
+    /// The healthy-network identity state.
+    pub fn clear() -> FaultState {
+        FaultState::default()
+    }
+
+    pub fn is_clear(&self) -> bool {
+        *self == FaultState::clear()
+    }
+
+    pub fn is_stalled_at(&self, t_s: f64) -> bool {
+        self.stalled_until_s.is_some_and(|until| t_s < until)
+    }
+
+    /// Derive the degraded path profile: capacity and RTT scaled, base
+    /// loss raised. End-system characteristics (disk, NIC, cores) are
+    /// untouched — these are *network* faults.
+    pub fn degrade(&self, profile: &NetProfile) -> NetProfile {
+        let mut p = profile.clone();
+        p.bandwidth_mbps = profile.bandwidth_mbps * self.capacity_factor;
+        p.rtt_s = profile.rtt_s * self.rtt_factor;
+        p.base_loss = (profile.base_loss + self.extra_loss).min(0.5);
+        p
+    }
+
+    /// Fold surge streams into a load snapshot, re-normalizing the
+    /// intensity against the profile's ceiling.
+    pub fn surge(&self, load: LoadState, profile: &NetProfile) -> LoadState {
+        if self.extra_bg_streams <= 0.0 {
+            return load;
+        }
+        let bg = load.bg_streams + self.extra_bg_streams;
+        let max_bg = profile.bg_streams_peak * 2.5;
+        LoadState {
+            bg_streams: bg,
+            intensity: (bg / max_bg).min(1.0),
+            peak: load.peak,
+        }
+    }
+}
+
+/// Pure, deterministic view over a plan: all randomness was spent at
+/// [`FaultPlan::generate`] time, so querying consumes nothing.
+#[derive(Debug, Clone)]
+pub struct FaultEngine {
+    plan: FaultPlan,
+}
+
+impl FaultEngine {
+    pub fn new(plan: FaultPlan) -> FaultEngine {
+        FaultEngine { plan }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Events active at `t_s`.
+    pub fn active_at(&self, t_s: f64) -> Vec<&FaultEvent> {
+        self.plan.events.iter().filter(|e| e.active_at(t_s)).collect()
+    }
+
+    /// Fold every active event into one [`FaultState`]: capacity
+    /// factors multiply, loss adds, RTT factors multiply, surge streams
+    /// add, and overlapping stalls keep the latest end time.
+    pub fn state_at(&self, t_s: f64) -> FaultState {
+        let mut s = FaultState::clear();
+        for e in &self.plan.events {
+            if !e.active_at(t_s) {
+                continue;
+            }
+            match e.kind {
+                FaultKind::LinkDegradation => {
+                    s.capacity_factor *= (1.0 - e.magnitude).max(0.05);
+                }
+                FaultKind::LossBurst => s.extra_loss += e.magnitude,
+                FaultKind::RttInflation => s.rtt_factor *= 1.0 + e.magnitude,
+                FaultKind::TrafficSurge => s.extra_bg_streams += e.magnitude,
+                FaultKind::EndpointStall => {
+                    let end = e.t_end_s();
+                    s.stalled_until_s = Some(
+                        s.stalled_until_s.map_or(end, |cur: f64| cur.max(end)),
+                    );
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: FaultKind, start: f64, dur: f64, mag: f64) -> FaultEvent {
+        FaultEvent {
+            kind,
+            t_start_s: start,
+            duration_s: dur,
+            magnitude: mag,
+        }
+    }
+
+    #[test]
+    fn clear_state_is_identity() {
+        let s = FaultState::clear();
+        assert!(s.is_clear());
+        let p = NetProfile::xsede();
+        assert_eq!(s.degrade(&p), p);
+        let load = LoadState {
+            bg_streams: 10.0,
+            intensity: 0.2,
+            peak: false,
+        };
+        assert_eq!(s.surge(load, &p), load);
+    }
+
+    #[test]
+    fn degradation_scales_capacity() {
+        let eng = FaultEngine::new(FaultPlan {
+            events: vec![ev(FaultKind::LinkDegradation, 100.0, 50.0, 0.6)],
+        });
+        assert!(eng.state_at(50.0).is_clear());
+        let s = eng.state_at(120.0);
+        assert!((s.capacity_factor - 0.4).abs() < 1e-12);
+        assert!(eng.state_at(150.0).is_clear(), "fault must restore");
+        let p = NetProfile::xsede();
+        let d = s.degrade(&p);
+        assert!((d.bandwidth_mbps - 4000.0).abs() < 1e-6);
+        assert_eq!(d.rtt_s, p.rtt_s);
+    }
+
+    #[test]
+    fn overlapping_events_combine() {
+        let eng = FaultEngine::new(FaultPlan {
+            events: vec![
+                ev(FaultKind::LinkDegradation, 0.0, 100.0, 0.5),
+                ev(FaultKind::LinkDegradation, 50.0, 100.0, 0.5),
+                ev(FaultKind::LossBurst, 0.0, 100.0, 1e-3),
+                ev(FaultKind::LossBurst, 0.0, 100.0, 2e-3),
+                ev(FaultKind::RttInflation, 0.0, 100.0, 1.0),
+                ev(FaultKind::TrafficSurge, 0.0, 100.0, 12.0),
+            ],
+        });
+        let s = eng.state_at(75.0);
+        assert!((s.capacity_factor - 0.25).abs() < 1e-12);
+        assert!((s.extra_loss - 3e-3).abs() < 1e-15);
+        assert!((s.rtt_factor - 2.0).abs() < 1e-12);
+        assert!((s.extra_bg_streams - 12.0).abs() < 1e-12);
+        assert_eq!(eng.active_at(75.0).len(), 6);
+    }
+
+    #[test]
+    fn stalls_keep_latest_end() {
+        let eng = FaultEngine::new(FaultPlan {
+            events: vec![
+                ev(FaultKind::EndpointStall, 10.0, 20.0, 1.0),
+                ev(FaultKind::EndpointStall, 15.0, 40.0, 1.0),
+            ],
+        });
+        let s = eng.state_at(16.0);
+        assert_eq!(s.stalled_until_s, Some(55.0));
+        assert!(s.is_stalled_at(16.0));
+        assert!(!s.is_stalled_at(56.0));
+    }
+
+    #[test]
+    fn rtt_inflation_shrinks_window_cap() {
+        let p = NetProfile::xsede();
+        let s = FaultState {
+            rtt_factor: 4.0,
+            ..FaultState::clear()
+        };
+        let d = s.degrade(&p);
+        assert!((d.window_cap_mbps() - p.window_cap_mbps() / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn surge_raises_intensity() {
+        let p = NetProfile::xsede();
+        let s = FaultState {
+            extra_bg_streams: 60.0,
+            ..FaultState::clear()
+        };
+        let load = LoadState {
+            bg_streams: 12.0,
+            intensity: 0.1,
+            peak: false,
+        };
+        let surged = s.surge(load, &p);
+        assert!((surged.bg_streams - 72.0).abs() < 1e-12);
+        assert!(surged.intensity > load.intensity);
+        assert!(surged.intensity <= 1.0);
+    }
+}

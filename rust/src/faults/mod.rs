@@ -1,0 +1,65 @@
+//! Deterministic fault injection for the transfer stack.
+//!
+//! The paper's core claim is *dynamic* adaptation: the online phase
+//! monitors deviation from the offline model and re-tunes protocol
+//! parameters when the network changes underneath a transfer (§4.2).
+//! This subsystem manufactures exactly those changes, reproducibly, so
+//! the deviation monitor, the re-tuning path and the coordinator's
+//! retry/resume machinery can be stress-tested.
+//!
+//! # Fault model
+//!
+//! A [`FaultPlan`] is a seed-derived schedule of [`FaultEvent`]s over a
+//! time horizon. Five fault kinds are supported ([`FaultKind`]):
+//!
+//! * **LinkDegradation** — the bottleneck capacity drops by
+//!   `magnitude` (fraction removed) and restores when the event ends;
+//! * **LossBurst** — `magnitude` of extra packet-loss probability on
+//!   the path (route flap, microwave fade, overloaded middlebox);
+//! * **RttInflation** — RTT multiplied by `1 + magnitude` (bufferbloat
+//!   or a reroute), which also shrinks the per-stream window cap;
+//! * **TrafficSurge** — `magnitude` extra contending background
+//!   streams at the bottleneck, beyond the diurnal process;
+//! * **EndpointStall** — the remote endpoint stops responding for the
+//!   event's duration; in-flight sample transfers fail and new ones
+//!   cannot start until the stall clears.
+//!
+//! # Hook points
+//!
+//! Faults are injected through explicit hooks, never by mutating the
+//! simulator's state ad hoc:
+//!
+//! * [`crate::sim::tcp::stream_rate_under_fault`] — per-stream TCP rate
+//!   through a degraded profile;
+//! * [`crate::sim::link::share_bottleneck_under_fault`] — water-fill
+//!   over degraded capacity;
+//! * [`crate::sim::engine::SimEnv::with_faults`] /
+//!   [`crate::sim::engine::SimEnv::try_transfer_chunk`] — chunked
+//!   single-job transfers under a plan, with fallible chunks that
+//!   surface endpoint stalls to the coordinator;
+//! * [`crate::sim::multiuser::MultiUserSim::with_faults`] — the shared
+//!   bottleneck in the §5.4 contention simulation.
+//!
+//! At each chunk (or tick) the active events are folded into one
+//! [`FaultState`] — overlapping capacity factors multiply, loss adds,
+//! RTT factors multiply, surges add, stalls take the latest end — and
+//! the state is held piecewise-constant for that chunk.
+//!
+//! # Determinism
+//!
+//! [`FaultPlan::generate`] draws every event from a
+//! [`crate::util::rng::Rng`] seeded only by the caller's seed (and
+//! scaled by the profile), so the same seed always yields the same
+//! event sequence, and the plan itself consumes no randomness after
+//! construction: replaying a transfer with the same seeds reproduces
+//! the faulted run bit-for-bit. The recovery side (retry/backoff,
+//! checkpoint/resume, monitor-triggered re-tuning) lives in
+//! `coordinator` and `online`; `experiments/robustness` sweeps fault
+//! intensity and compares recovered-throughput fractions across
+//! optimizers.
+
+pub mod engine;
+pub mod plan;
+
+pub use engine::{FaultEngine, FaultState};
+pub use plan::{FaultEvent, FaultKind, FaultPlan, FaultPlanConfig};

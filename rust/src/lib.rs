@@ -10,6 +10,10 @@
 //! * [`sim`] — the testbed substrate: a mechanistic wide-area transfer
 //!   simulator (TCP streams, endpoints, background traffic, shared
 //!   bottleneck links) standing in for XSEDE / DIDCLAB / Chameleon;
+//! * [`faults`] — deterministic, seed-driven fault injection: a
+//!   [`faults::FaultPlan`] schedules link degradation, loss bursts,
+//!   RTT inflation, traffic surges and endpoint stalls, which the sim
+//!   layer consumes through explicit hook points;
 //! * [`logs`] — GridFTP-style historical transfer logs: schema,
 //!   synthetic six-week generator, persistent store;
 //! * [`offline`] — the paper's offline phase: log clustering
@@ -28,10 +32,31 @@
 //!   scheduling, chunk streaming, multi-user orchestration, metrics;
 //! * [`experiments`] — one driver per paper table/figure, shared by the
 //!   benches in `rust/benches/` and the CLI.
+//!
+//! # Fault model & recovery
+//!
+//! The fault subsystem makes the stack's resilience claims testable.
+//! A [`faults::FaultPlan`] is generated once from a seed
+//! ([`faults::FaultPlanConfig`] sets horizon, event rate, intensity)
+//! and replayed read-only, so identically-seeded runs experience the
+//! identical storm.  The sim layer consumes it through hooks —
+//! [`sim::tcp::stream_rate_under_fault`],
+//! [`sim::link::share_bottleneck_under_fault`], and
+//! `SimEnv::with_faults` / `MultiUserSim::with_faults` — never by
+//! ad-hoc state mutation.  Recovery lives one layer up: the
+//! coordinator retries failed chunks under the scheduler's
+//! [`coordinator::scheduler::RetryPolicy`] (exponential backoff,
+//! capped), resumes from per-chunk checkpoints so completed bytes are
+//! never re-sent, and after a confirmed fault re-queries the knowledge
+//! base and restarts the ASM bisection — the paper's §4.2 re-tuning
+//! path, surfaced through [`online::monitor::AlarmLevel`] and
+//! `DynamicTuner::rearm`.  `experiments::robustness` sweeps fault
+//! intensity and reports each model's recovered-throughput fraction.
 
 pub mod baselines;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod logs;
 pub mod offline;
 pub mod online;

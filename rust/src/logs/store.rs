@@ -5,7 +5,7 @@
 
 use crate::logs::schema::LogEntry;
 use crate::util::json::Value;
-use anyhow::{Context, Result};
+use crate::util::err::{Context, Result};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 

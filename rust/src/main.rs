@@ -7,11 +7,11 @@
 //! twophase transfer  --profile xsede --files 64 --avg-mb 512 \
 //!                    [--model asm|harp|annot|go|sp|sc|nmt|noopt] [--peak]
 //! twophase multiuser [--users 4] [--model asm] [--duration 600]
-//! twophase experiment <table1|fig1|fig4a|fig4b|fig5|fig6|fig7|fig8|fig9|all>
+//! twophase experiment <table1|fig1|fig4a|fig4b|fig5|fig6|fig7|fig8|fig9|robustness|all>
 //! ```
 
-use anyhow::{bail, Context, Result};
 use std::sync::Arc;
+use twophase::bail;
 use twophase::baselines::ann_ot::AnnOtModel;
 use twophase::baselines::api::OptimizerKind;
 use twophase::baselines::static_ann::StaticAnnModel;
@@ -28,6 +28,7 @@ use twophase::runtime::engine::Engine;
 use twophase::sim::dataset::Dataset;
 use twophase::sim::profile::NetProfile;
 use twophase::util::cli::Args;
+use twophase::util::err::{Context, Result};
 
 fn main() {
     let args = Args::from_env();
@@ -258,6 +259,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "fig9" | "fig2" | "fig10" => {
                 experiments::fig9::run();
             }
+            "robustness" => {
+                experiments::robustness::run();
+            }
             other => bail!("unknown experiment '{other}'"),
         }
         Ok(())
@@ -265,6 +269,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if which == "all" {
         for name in [
             "table1", "fig1", "fig4a", "fig4b", "fig5", "fig6", "fig7", "fig8", "fig9",
+            "robustness",
         ] {
             println!("\n=== {name} ===");
             run_one(name)?;

@@ -135,6 +135,18 @@ impl Asm {
         self.decision()
     }
 
+    /// Restart the bisection from scratch (recovery path: after a
+    /// confirmed fault the pre-fault surface choice is stale, so the
+    /// coordinator re-queries the knowledge base and re-runs Algorithm
+    /// 1 from the median bucket).  `samples_used` keeps accumulating —
+    /// recovery samples are real sample transfers.
+    pub fn restart(&mut self) {
+        self.lo = 0;
+        self.hi = self.set.buckets.len() - 1;
+        self.current = self.set.median_bucket();
+        self.phase = AsmPhase::Sampling;
+    }
+
     /// Re-select the bucket whose prediction is closest to a measured
     /// throughput (the "FindClosestSurface" of Algorithm 1, used after
     /// a persistent deviation mid-stream).
@@ -330,6 +342,26 @@ mod tests {
         assert_eq!(d.bucket, 3, "400-level bucket is closest to 410");
         let d2 = asm.reselect(990.0);
         assert_eq!(d2.bucket, 0);
+    }
+
+    #[test]
+    fn restart_reopens_bisection_from_median() {
+        let mut asm = Asm::new(set_with_levels(&five_levels()));
+        // drive to the heaviest bucket and converge
+        while asm.phase() == AsmPhase::Sampling {
+            asm.observe(200.0);
+        }
+        assert_eq!(asm.current_bucket(), 4);
+        let used = asm.samples_used();
+        asm.restart();
+        assert_eq!(asm.phase(), AsmPhase::Sampling);
+        assert_eq!(asm.current_bucket(), 2, "back at the median");
+        assert_eq!(asm.samples_used(), used, "history is kept");
+        // and it can converge somewhere else this time
+        while asm.phase() == AsmPhase::Sampling {
+            asm.observe(1000.0);
+        }
+        assert_eq!(asm.current_bucket(), 0);
     }
 
     #[test]

@@ -106,6 +106,14 @@ impl DynamicTuner {
         }
     }
 
+    /// Recovery re-arm: after a confirmed fault the coordinator calls
+    /// this to restart the ASM bisection (fresh Algorithm-1 pass over
+    /// the surface stack) and clear the monitor's stale EWMA state.
+    pub fn rearm(&mut self) {
+        self.asm.restart();
+        self.monitor.reset();
+    }
+
     pub fn asm(&self) -> &Asm {
         &self.asm
     }
@@ -221,6 +229,23 @@ mod tests {
         }
         assert_eq!(t.asm().current_bucket(), 0, "should climb back up");
         assert!(t.retunes >= 2);
+    }
+
+    #[test]
+    fn rearm_restarts_sampling_with_clean_monitor() {
+        let mut t = DynamicTuner::with_defaults(set_with_levels(&[1000.0, 600.0, 200.0]));
+        t.observe(600.0); // converge, start streaming
+        assert_eq!(t.phase(), AsmPhase::Streaming);
+        t.observe(180.0); // fault hits: deviation building
+        t.rearm();
+        assert_eq!(t.phase(), AsmPhase::Sampling, "bisection reopened");
+        assert_eq!(t.asm().current_bucket(), 1, "back at the median");
+        assert!(t.monitor.smoothed().is_none(), "monitor state cleared");
+        // converges again on post-fault conditions
+        t.observe(200.0);
+        t.observe(200.0);
+        assert_eq!(t.phase(), AsmPhase::Streaming);
+        assert_eq!(t.asm().current_bucket(), 2);
     }
 
     #[test]

@@ -16,4 +16,4 @@ pub mod monitor;
 
 pub use asm::{Asm, AsmDecision, AsmPhase};
 pub use controller::DynamicTuner;
-pub use monitor::DeviationMonitor;
+pub use monitor::{AlarmLevel, DeviationMonitor};

@@ -7,6 +7,24 @@
 
 use crate::util::stats::Ewma;
 
+/// Graded deviation alarm: a [`Warning`] means the smoothed signal is
+/// out of band but the streak is still building (could be a fault
+/// transient); [`Confirmed`] means the deviation is persistent and the
+/// re-tuning path (re-query the knowledge base, re-run the ASM) should
+/// fire.
+///
+/// [`Warning`]: AlarmLevel::Warning
+/// [`Confirmed`]: AlarmLevel::Confirmed
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlarmLevel {
+    /// smoothed measurement inside the confidence band
+    Clear,
+    /// out of band, streak not yet complete
+    Warning,
+    /// persistent deviation — re-tune now
+    Confirmed,
+}
+
 #[derive(Debug, Clone)]
 pub struct DeviationMonitor {
     ewma: Ewma,
@@ -27,13 +45,26 @@ impl DeviationMonitor {
     /// Feed one measurement against the surface prediction ± band.
     /// Returns true when the deviation is persistent.
     pub fn observe(&mut self, predicted: f64, band: f64, measured: f64) -> bool {
+        self.observe_level(predicted, band, measured) == AlarmLevel::Confirmed
+    }
+
+    /// Like [`DeviationMonitor::observe`] but exposes the graded alarm,
+    /// letting fault-aware callers distinguish "watch closely" from
+    /// "act".
+    pub fn observe_level(&mut self, predicted: f64, band: f64, measured: f64) -> AlarmLevel {
         let smoothed = self.ewma.update(measured);
         if (smoothed - predicted).abs() > band {
             self.out_streak += 1;
         } else {
             self.out_streak = 0;
         }
-        self.out_streak >= self.streak
+        if self.out_streak >= self.streak {
+            AlarmLevel::Confirmed
+        } else if self.out_streak > 0 {
+            AlarmLevel::Warning
+        } else {
+            AlarmLevel::Clear
+        }
     }
 
     /// The smoothed throughput estimate (for surface re-selection).
@@ -100,6 +131,30 @@ mod tests {
         m.reset();
         assert!(m.smoothed().is_none());
         assert!(!m.observe(100.0, 5.0, 100.0));
+    }
+
+    #[test]
+    fn alarm_escalates_warning_then_confirmed() {
+        let mut m = DeviationMonitor::new(0.9, 3);
+        assert_eq!(m.observe_level(100.0, 10.0, 100.0), AlarmLevel::Clear);
+        assert_eq!(m.observe_level(100.0, 10.0, 300.0), AlarmLevel::Warning);
+        assert_eq!(m.observe_level(100.0, 10.0, 300.0), AlarmLevel::Warning);
+        assert_eq!(m.observe_level(100.0, 10.0, 300.0), AlarmLevel::Confirmed);
+        // smoothed signal needs a tick to come back (ewma ≈ 120: still out)
+        assert_eq!(m.observe_level(100.0, 10.0, 100.5), AlarmLevel::Confirmed);
+        // once it is inside the band the streak resets straight to Clear
+        assert_eq!(m.observe_level(100.0, 10.0, 100.0), AlarmLevel::Clear);
+    }
+
+    #[test]
+    fn observe_matches_confirmed_level() {
+        let mut a = DeviationMonitor::new(0.6, 2);
+        let mut b = DeviationMonitor::new(0.6, 2);
+        for &v in &[100.0, 250.0, 250.0, 250.0, 100.0, 100.0] {
+            let fired = a.observe(100.0, 20.0, v);
+            let level = b.observe_level(100.0, 20.0, v);
+            assert_eq!(fired, level == AlarmLevel::Confirmed);
+        }
     }
 
     #[test]

@@ -4,10 +4,17 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! Every artifact was lowered with `return_tuple=True`, so outputs come
 //! back as one tuple literal that we decompose.
+//!
+//! The XLA bindings are only available in images that ship the vendored
+//! `xla` crate, so the real implementation is gated behind the `pjrt`
+//! cargo feature. Without it this module compiles a stub [`Engine`]
+//! with the same public surface whose loaders report the runtime as
+//! unavailable — every caller already falls back to native math when
+//! `try_default()` returns `None`, so plain-toolchain builds work from
+//! a clean checkout.
 
 use crate::runtime::manifest::Manifest;
-use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
+use crate::util::err::Result;
 use std::path::Path;
 
 /// Outputs of the `surface_pipeline` artifact (all row-major f32).
@@ -38,18 +45,21 @@ pub struct KmeansStepOut {
 }
 
 /// Compiled-artifact registry over one PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    executables: std::collections::BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load and compile every artifact in `dir`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        use crate::util::err::Context;
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut executables = BTreeMap::new();
+        let mut executables = std::collections::BTreeMap::new();
         for (name, meta) in &manifest.artifacts {
             let proto = xla::HloModuleProto::from_text_file(
                 meta.file
@@ -91,6 +101,8 @@ impl Engine {
     }
 
     fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        use crate::bail;
+        use crate::util::err::Context;
         let exe = self
             .executables
             .get(name)
@@ -176,7 +188,59 @@ impl Engine {
     }
 }
 
-#[cfg(test)]
+/// Stub engine for builds without the `pjrt` feature: the manifest
+/// still parses (so `twophase info` can report artifact status) but
+/// nothing compiles or executes.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always an error without the `pjrt` feature.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let _ = Manifest::load(&dir)?;
+        crate::bail!("built without the `pjrt` feature; PJRT execution is unavailable")
+    }
+
+    /// Always `None` without the `pjrt` feature; callers fall back to
+    /// native math.
+    pub fn try_default() -> Option<Engine> {
+        None
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn surface_pipeline(
+        &self,
+        _xs: &[f32],
+        _ys: &[f32],
+        _values: &[f32],
+    ) -> Result<SurfacePipelineOut> {
+        crate::bail!("built without the `pjrt` feature; PJRT execution is unavailable")
+    }
+
+    pub fn kmeans_step(&self, _x: &[f32], _c: &[f32]) -> Result<KmeansStepOut> {
+        crate::bail!("built without the `pjrt` feature; PJRT execution is unavailable")
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(Engine::try_default().is_none());
+        let e = Engine::load("/definitely/not/a/dir").unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

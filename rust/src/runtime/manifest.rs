@@ -1,8 +1,9 @@
 //! `artifacts/manifest.json` parsing: artifact names, files and the
 //! static shape family the AOT path fixed (S, GP, GC, RF, N, D, K).
 
+use crate::bail;
+use crate::util::err::{Context, Result};
 use crate::util::json::Value;
-use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

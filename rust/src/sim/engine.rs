@@ -3,12 +3,27 @@
 //! per-chunk parameter policy.  Every optimizer (ASM and the six
 //! baselines) runs against this same engine in the experiments.
 
+use crate::faults::{FaultEngine, FaultPlan, FaultState};
 use crate::sim::dataset::Dataset;
 use crate::sim::profile::NetProfile;
 use crate::sim::traffic::{LoadState, TrafficProcess};
 use crate::sim::transfer::ThroughputModel;
 use crate::util::rng::Rng;
 use crate::Params;
+
+/// Wall-clock cost of noticing an unresponsive endpoint (connection /
+/// control-channel timeout) before a chunk attempt is abandoned.
+pub const STALL_DETECT_S: f64 = 5.0;
+
+/// Why a fallible chunk attempt failed (see
+/// [`SimEnv::try_transfer_chunk`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChunkFault {
+    /// The endpoint is stalled; no data moved.  `resume_at_s` is when
+    /// the underlying fault clears (the coordinator does not get to see
+    /// this — its retry/backoff schedule is its own — but tests do).
+    EndpointStall { resume_at_s: f64 },
+}
 
 /// Context handed to the policy before each chunk.
 #[derive(Debug, Clone, Copy)]
@@ -64,6 +79,9 @@ pub struct SimEnv {
     pub traffic: TrafficProcess,
     pub now_s: f64,
     pub rng: Rng,
+    /// Optional fault schedule (None = benign network, the historical
+    /// behavior, bit-for-bit).
+    pub faults: Option<FaultEngine>,
 }
 
 impl SimEnv {
@@ -74,6 +92,7 @@ impl SimEnv {
             traffic,
             now_s: 0.0,
             rng: Rng::new(seed ^ 0x5e55_1015),
+            faults: None,
         }
     }
 
@@ -81,6 +100,48 @@ impl SimEnv {
     pub fn with_phase(mut self, phase_s: f64) -> SimEnv {
         self.traffic = self.traffic.with_phase(phase_s);
         self
+    }
+
+    /// Inject a fault schedule (fault-plan time 0 = the env's clock 0).
+    pub fn with_faults(mut self, plan: FaultPlan) -> SimEnv {
+        self.faults = Some(FaultEngine::new(plan));
+        self
+    }
+
+    /// The combined fault condition at the current clock (clear when no
+    /// schedule is installed).
+    pub fn fault_state(&self) -> FaultState {
+        self.faults
+            .as_ref()
+            .map(|f| f.state_at(self.now_s))
+            .unwrap_or_default()
+    }
+
+    /// Sample one chunk's throughput under the current fault state,
+    /// held piecewise-constant for the chunk.  Under fault injection
+    /// the sample is clamped to the (possibly degraded) link capacity
+    /// so that delivered bytes never exceed degraded capacity ×
+    /// elapsed time; the benign path keeps its historical unclamped
+    /// lognormal noise.
+    fn sample_chunk(&mut self, params: Params, chunk: &Dataset, fs: &FaultState) -> f64 {
+        let load = self.traffic.at(self.now_s);
+        if fs.is_clear() {
+            let th = self
+                .model
+                .sample(params, chunk, &load, &mut self.rng)
+                .max(1e-3);
+            return match &self.faults {
+                Some(_) => th.min(self.model.profile.bandwidth_mbps).max(1e-3),
+                None => th,
+            };
+        }
+        let degraded = ThroughputModel::new(fs.degrade(&self.model.profile));
+        let load = fs.surge(load, &self.model.profile);
+        let cap = degraded.profile.bandwidth_mbps;
+        degraded
+            .sample(params, chunk, &load, &mut self.rng)
+            .min(cap)
+            .max(1e-3)
     }
 
     /// Advance the clock, returning the new load state.
@@ -95,25 +156,60 @@ impl SimEnv {
 
     /// Execute a single sample/chunk transfer at `params`, advancing the
     /// clock by its duration.  Returns (measured Mbps, duration s).
+    ///
+    /// Infallible: an endpoint stall is simply waited out as dead time
+    /// (included in the measured throughput).  Coordinators that want
+    /// to retry/back off instead use [`SimEnv::try_transfer_chunk`].
     pub fn transfer_chunk(
         &mut self,
         params: Params,
         chunk: &Dataset,
         prev_params: Option<Params>,
     ) -> (f64, f64) {
-        let load = self.traffic.at(self.now_s);
-        let th = self
-            .model
-            .sample(params, chunk, &load, &mut self.rng)
-            .max(1e-3);
+        let mut stall_s = 0.0;
+        if let Some(until) = self.fault_state().stalled_until_s {
+            if until > self.now_s {
+                stall_s = until - self.now_s;
+                self.now_s = until;
+            }
+        }
+        let fs = self.fault_state();
+        let th = self.sample_chunk(params, chunk, &fs);
+        let penalty = prev_params
+            .map(|prev| self.model.param_change_penalty_s(prev, params))
+            .unwrap_or(0.0);
+        let duration = chunk.total_mb() * 8.0 / th + penalty + stall_s;
+        self.now_s += chunk.total_mb() * 8.0 / th + penalty;
+        // measured throughput includes the switch penalty + stall time
+        let measured = chunk.total_mb() * 8.0 / duration;
+        (measured, duration)
+    }
+
+    /// Fallible chunk attempt — the coordinator-facing fault hook.  If
+    /// the endpoint is stalled the attempt is abandoned after
+    /// [`STALL_DETECT_S`] of wall clock and nothing is transferred;
+    /// otherwise this behaves exactly like [`SimEnv::transfer_chunk`].
+    pub fn try_transfer_chunk(
+        &mut self,
+        params: Params,
+        chunk: &Dataset,
+        prev_params: Option<Params>,
+    ) -> Result<(f64, f64), ChunkFault> {
+        let fs = self.fault_state();
+        if let Some(until) = fs.stalled_until_s {
+            if until > self.now_s {
+                self.now_s += STALL_DETECT_S;
+                return Err(ChunkFault::EndpointStall { resume_at_s: until });
+            }
+        }
+        let th = self.sample_chunk(params, chunk, &fs);
         let penalty = prev_params
             .map(|prev| self.model.param_change_penalty_s(prev, params))
             .unwrap_or(0.0);
         let duration = chunk.total_mb() * 8.0 / th + penalty;
         self.now_s += duration;
-        // measured throughput includes the switch penalty
         let measured = chunk.total_mb() * 8.0 / duration;
-        (measured, duration)
+        Ok((measured, duration))
     }
 
     /// Run a full chunked transfer under `policy` (called before every
@@ -151,13 +247,19 @@ impl SimEnv {
             let penalty = last_params
                 .map(|prev| self.model.param_change_penalty_s(prev, params))
                 .unwrap_or(0.0);
-            let load = self.traffic.at(self.now_s);
-            let th = self
-                .model
-                .sample(params, &chunk, &load, &mut self.rng)
-                .max(1e-3);
-            let duration = chunk.total_mb() * 8.0 / th + penalty;
-            self.now_s += duration;
+            // endpoint stalls are waited out as dead time in this
+            // infallible path (the resilient coordinator retries instead)
+            let mut stall_s = 0.0;
+            if let Some(until) = self.fault_state().stalled_until_s {
+                if until > self.now_s {
+                    stall_s = until - self.now_s;
+                    self.now_s = until;
+                }
+            }
+            let fs = self.fault_state();
+            let th = self.sample_chunk(params, &chunk, &fs);
+            let duration = chunk.total_mb() * 8.0 / th + penalty + stall_s;
+            self.now_s += chunk.total_mb() * 8.0 / th + penalty;
 
             let measured = chunk.total_mb() * 8.0 / duration;
             samples.push(ChunkSample {
@@ -261,6 +363,124 @@ mod tests {
         for w in out.samples.windows(2) {
             assert!(w[1].t_s > w[0].t_s);
         }
+    }
+
+    #[test]
+    fn no_plan_and_empty_plan_share_fault_free_behavior() {
+        use crate::faults::FaultPlan;
+        let d = Dataset::new(16, 256.0);
+        let mut plain = SimEnv::new(NetProfile::xsede(), 11).with_phase(0.0);
+        let a = plain.run_transfer(&d, 1024.0, |_, _| Params::new(8, 4, 8));
+        let mut faulted = SimEnv::new(NetProfile::xsede(), 11)
+            .with_phase(0.0)
+            .with_faults(FaultPlan::empty());
+        let b = faulted.run_transfer(&d, 1024.0, |_, _| Params::new(8, 4, 8));
+        assert_eq!(a.duration_s, b.duration_s);
+        assert_eq!(a.samples.len(), b.samples.len());
+    }
+
+    #[test]
+    fn degradation_slows_the_transfer() {
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let d = Dataset::new(64, 256.0);
+        let mut clean = SimEnv::new(NetProfile::xsede(), 21).with_phase(0.0);
+        let base = clean.run_transfer(&d, 1024.0, |_, _| Params::new(8, 4, 8));
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                kind: FaultKind::LinkDegradation,
+                t_start_s: 0.0,
+                duration_s: 1e9,
+                magnitude: 0.8,
+            }],
+        };
+        let mut env = SimEnv::new(NetProfile::xsede(), 21)
+            .with_phase(0.0)
+            .with_faults(plan);
+        let out = env.run_transfer(&d, 1024.0, |_, _| Params::new(8, 4, 8));
+        assert!(
+            out.duration_s > 2.0 * base.duration_s,
+            "80% capacity loss must slow the run: {} vs {}",
+            out.duration_s,
+            base.duration_s
+        );
+        // delivered bytes bounded by the degraded capacity
+        let cap = 0.2 * NetProfile::xsede().bandwidth_mbps;
+        for s in &out.samples {
+            assert!(s.throughput_mbps <= cap + 1e-9, "{}", s.throughput_mbps);
+        }
+    }
+
+    #[test]
+    fn stall_charges_dead_time_in_infallible_path() {
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let d = Dataset::new(8, 128.0);
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                kind: FaultKind::EndpointStall,
+                t_start_s: 0.0,
+                duration_s: 300.0,
+                magnitude: 1.0,
+            }],
+        };
+        let mut env = SimEnv::new(NetProfile::xsede(), 5)
+            .with_phase(0.0)
+            .with_faults(plan);
+        let (measured, duration) = env.transfer_chunk(Params::new(8, 4, 8), &d, None);
+        assert!(duration > 300.0, "stall must be charged: {duration}");
+        assert!(env.now_s >= 300.0);
+        assert!(measured < d.total_mb() * 8.0 / 300.0);
+    }
+
+    #[test]
+    fn try_transfer_chunk_fails_fast_under_stall_then_recovers() {
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let d = Dataset::new(8, 128.0);
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                kind: FaultKind::EndpointStall,
+                t_start_s: 0.0,
+                duration_s: 60.0,
+                magnitude: 1.0,
+            }],
+        };
+        let mut env = SimEnv::new(NetProfile::xsede(), 5)
+            .with_phase(0.0)
+            .with_faults(plan);
+        let err = env
+            .try_transfer_chunk(Params::new(8, 4, 8), &d, None)
+            .unwrap_err();
+        assert_eq!(err, ChunkFault::EndpointStall { resume_at_s: 60.0 });
+        assert!((env.now_s - STALL_DETECT_S).abs() < 1e-9);
+        // once the stall clears, the same call succeeds
+        env.now_s = 61.0;
+        let (measured, _) = env
+            .try_transfer_chunk(Params::new(8, 4, 8), &d, None)
+            .unwrap();
+        assert!(measured > 0.0);
+    }
+
+    #[test]
+    fn faulted_runs_are_deterministic_under_seed() {
+        use crate::faults::{FaultPlan, FaultPlanConfig};
+        let d = Dataset::new(64, 256.0);
+        let profile = NetProfile::didclab_xsede();
+        let run = || {
+            let plan = FaultPlan::generate(
+                &profile,
+                &FaultPlanConfig::with_intensity(0.8),
+                0xDEAD,
+            );
+            let mut env = SimEnv::new(profile.clone(), 33)
+                .with_phase(0.0)
+                .with_faults(plan);
+            env.run_transfer(&d, 512.0, |_, _| Params::new(8, 4, 8))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.duration_s, b.duration_s);
+        let ths_a: Vec<f64> = a.samples.iter().map(|s| s.throughput_mbps).collect();
+        let ths_b: Vec<f64> = b.samples.iter().map(|s| s.throughput_mbps).collect();
+        assert_eq!(ths_a, ths_b);
     }
 
     #[test]

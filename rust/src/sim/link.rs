@@ -64,6 +64,23 @@ pub fn share_bottleneck(
     alloc
 }
 
+/// Fault-injection hook: water-fill over a degraded bottleneck.  The
+/// capacity factor shrinks the pool and surge streams contend for
+/// their proportional share alongside the diurnal background.  With a
+/// clear state this is exactly [`share_bottleneck`].
+pub fn share_bottleneck_under_fault(
+    capacity_mbps: f64,
+    demands: &[LinkDemand],
+    bg_streams: f64,
+    fault: &crate::faults::FaultState,
+) -> Vec<f64> {
+    share_bottleneck(
+        capacity_mbps * fault.capacity_factor,
+        demands,
+        bg_streams + fault.extra_bg_streams,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +141,27 @@ mod tests {
     fn zero_capacity_allocates_zero() {
         let a = share_bottleneck(0.0, &[d(4.0, 100.0)], 0.0);
         assert_eq!(a[0], 0.0);
+    }
+
+    #[test]
+    fn fault_hook_is_identity_when_clear() {
+        use crate::faults::FaultState;
+        let demands = [d(8.0, 900.0), d(8.0, 900.0)];
+        let clear = share_bottleneck_under_fault(1000.0, &demands, 4.0, &FaultState::clear());
+        assert_eq!(clear, share_bottleneck(1000.0, &demands, 4.0));
+    }
+
+    #[test]
+    fn fault_hook_shrinks_pool_and_adds_contention() {
+        use crate::faults::FaultState;
+        let demands = [d(10.0, 1e9)];
+        let fault = FaultState {
+            capacity_factor: 0.5,
+            extra_bg_streams: 10.0,
+            ..FaultState::clear()
+        };
+        let a = share_bottleneck_under_fault(1000.0, &demands, 0.0, &fault);
+        // half the pool, then a further half to the surge streams
+        assert!((a[0] - 250.0).abs() < 1e-6, "{a:?}");
     }
 }

@@ -28,7 +28,7 @@ pub mod traffic;
 pub mod transfer;
 
 pub use dataset::{Dataset, FileSizeClass};
-pub use engine::{SimEnv, TransferOutcome};
+pub use engine::{ChunkFault, SimEnv, TransferOutcome, STALL_DETECT_S};
 pub use multiuser::{MultiUserSim, UserOutcome};
 pub use profile::NetProfile;
 pub use traffic::{LoadState, TrafficProcess};

@@ -12,8 +12,9 @@
 //! ("individual ASM instances can detect performance drop and start
 //! recalculating the parameters").
 
+use crate::faults::{FaultEngine, FaultPlan, FaultState};
 use crate::sim::dataset::Dataset;
-use crate::sim::link::{share_bottleneck, LinkDemand};
+use crate::sim::link::{share_bottleneck_under_fault, LinkDemand};
 use crate::sim::profile::NetProfile;
 use crate::sim::tcp;
 use crate::sim::traffic::TrafficProcess;
@@ -66,6 +67,8 @@ pub struct MultiUserSim {
     pub tick_s: f64,
     pub decision_period_s: f64,
     rng: Rng,
+    /// Optional shared-bottleneck fault schedule (None = benign).
+    faults: Option<FaultEngine>,
 }
 
 impl MultiUserSim {
@@ -78,16 +81,24 @@ impl MultiUserSim {
             tick_s: 1.0,
             decision_period_s: 20.0,
             rng: Rng::new(seed ^ 0x6d756c7469),
+            faults: None,
         }
+    }
+
+    /// Inject a fault schedule shared by every user (they contend on
+    /// the same bottleneck and endpoint).
+    pub fn with_faults(mut self, plan: FaultPlan) -> MultiUserSim {
+        self.faults = Some(FaultEngine::new(plan));
+        self
     }
 
     /// Per-user raw stream demand at the current loss (hard caps only;
     /// the soft efficiency factors are applied to the allocation so the
     /// decomposition mirrors `ThroughputModel::steady` exactly).
-    fn user_demand(&self, params: Params, lambda: f64) -> f64 {
+    fn user_demand(&self, params: Params, lambda: f64, fault: &FaultState) -> f64 {
         let p = &self.profile;
         let s = params.total_streams() as f64;
-        let r = tcp::stream_rate_mbps(p, lambda);
+        let r = tcp::stream_rate_under_fault(p, lambda, fault);
         (s * r).min(p.disk_mbps).min(p.nic_mbps)
     }
 
@@ -157,23 +168,36 @@ impl MultiUserSim {
         for tick in 0..ticks {
             let t = tick as f64 * self.tick_s;
             let load = self.traffic.at(t);
+            let fs = self
+                .faults
+                .as_ref()
+                .map(|f| f.state_at(t))
+                .unwrap_or_default();
 
             // joint equilibrium loss across every user's streams + bg
+            // (surge streams contend for loss like any other traffic)
             let total_streams: f64 = params
                 .iter()
                 .map(|p| p.total_streams() as f64)
                 .sum::<f64>()
-                + load.bg_streams;
+                + load.bg_streams
+                + fs.extra_bg_streams;
             let lambda = self.model.pressure_loss(total_streams);
 
             let demands: Vec<LinkDemand> = (0..n)
                 .map(|i| LinkDemand {
                     streams: params[i].total_streams() as f64,
-                    demand_mbps: self.user_demand(params[i], lambda),
+                    demand_mbps: self.user_demand(params[i], lambda, &fs),
                 })
                 .collect();
-            let alloc =
-                share_bottleneck(self.profile.bandwidth_mbps, &demands, load.bg_streams);
+            // raw bg here: the fault hook adds the surge streams itself
+            let alloc = share_bottleneck_under_fault(
+                self.profile.bandwidth_mbps,
+                &demands,
+                load.bg_streams,
+                &fs,
+            );
+            let endpoint_stalled = fs.is_stalled_at(t);
 
             for i in 0..n {
                 let mut th = alloc[i]
@@ -181,6 +205,10 @@ impl MultiUserSim {
                     * self.dataset_factor(params[i], &datasets[i], alloc[i]);
                 // measurement noise at tick granularity
                 th *= self.rng.lognormal(0.0, 0.03);
+                // a stalled endpoint serves nobody this tick
+                if endpoint_stalled {
+                    th = 0.0;
+                }
                 // stalled users (param-change dead time) move nothing
                 if stall_s[i] > 0.0 {
                     let stalled = stall_s[i].min(self.tick_s);
@@ -312,6 +340,69 @@ mod tests {
         let out = sim.run(&mut pols, &ds, 300.0);
         // the thrasher pays stall time the steady user doesn't
         assert!(out[0].transferred_mb < out[1].transferred_mb);
+    }
+
+    #[test]
+    fn shared_degradation_cuts_every_user() {
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                kind: FaultKind::LinkDegradation,
+                t_start_s: 0.0,
+                duration_s: 1e9,
+                magnitude: 0.8,
+            }],
+        };
+        let ds = vec![dataset(); 4];
+        let run = |plan: Option<FaultPlan>| {
+            let mut sim = MultiUserSim::new(NetProfile::chameleon(), 11);
+            if let Some(p) = plan {
+                sim = sim.with_faults(p);
+            }
+            let mut pols: Vec<Box<dyn UserPolicy>> = (0..4)
+                .map(|_| static_policy(Params::new(8, 4, 8)))
+                .collect();
+            sim.run(&mut pols, &ds, 120.0)
+        };
+        let clean = run(None);
+        let faulted = run(Some(plan));
+        for (c, f) in clean.iter().zip(&faulted) {
+            assert!(
+                f.mean_throughput_mbps < 0.5 * c.mean_throughput_mbps,
+                "user {}: {} vs {}",
+                c.user_id,
+                f.mean_throughput_mbps,
+                c.mean_throughput_mbps
+            );
+        }
+    }
+
+    #[test]
+    fn endpoint_stall_freezes_all_users() {
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                kind: FaultKind::EndpointStall,
+                t_start_s: 30.0,
+                duration_s: 20.0,
+                magnitude: 1.0,
+            }],
+        };
+        let mut sim = MultiUserSim::new(NetProfile::chameleon(), 13).with_faults(plan);
+        let mut pols: Vec<Box<dyn UserPolicy>> = (0..2)
+            .map(|_| static_policy(Params::new(8, 4, 8)))
+            .collect();
+        let ds = vec![dataset(); 2];
+        let out = sim.run(&mut pols, &ds, 120.0);
+        for u in &out {
+            for &(t, th) in &u.series {
+                if (30.0..50.0).contains(&t) {
+                    assert_eq!(th, 0.0, "user {} at t={t}", u.user_id);
+                } else if !(29.0..51.0).contains(&t) {
+                    assert!(th > 0.0, "user {} at t={t}", u.user_id);
+                }
+            }
+        }
     }
 
     #[test]

@@ -43,6 +43,24 @@ pub fn congestion_loss(base_loss: f64, offered_mbps: f64, capacity_mbps: f64) ->
     }
 }
 
+/// Fault-injection hook: per-stream rate when a [`FaultState`] is
+/// active.  The profile is degraded first (capacity and window cap
+/// shrink, RTT inflates) and the fault's extra loss is added to the
+/// congestion loss, so every downstream consumer sees a consistent
+/// picture of the degraded path.  With a clear state this is exactly
+/// [`stream_rate_mbps`].
+pub fn stream_rate_under_fault(
+    profile: &NetProfile,
+    loss: f64,
+    fault: &crate::faults::FaultState,
+) -> f64 {
+    if fault.is_clear() {
+        return stream_rate_mbps(profile, loss);
+    }
+    let degraded = fault.degrade(profile);
+    stream_rate_mbps(&degraded, loss + fault.extra_loss)
+}
+
 /// Slow-start dead time (seconds) charged when `new_streams` streams
 /// are (re)opened: ~`log2(W_ss / MSS)` RTTs at roughly half rate, plus
 /// a flat per-process setup cost charged by the caller.
@@ -102,6 +120,42 @@ mod tests {
             let r = stream_rate_mbps(&p, l);
             assert!(r <= prev + 1e-12);
             prev = r;
+        }
+    }
+
+    #[test]
+    fn fault_hook_is_identity_when_clear() {
+        use crate::faults::FaultState;
+        let p = NetProfile::xsede();
+        for &l in &[1e-6, 1e-4, 1e-2] {
+            assert_eq!(
+                stream_rate_under_fault(&p, l, &FaultState::clear()),
+                stream_rate_mbps(&p, l)
+            );
+        }
+    }
+
+    #[test]
+    fn fault_hook_degrades_rate() {
+        use crate::faults::FaultState;
+        let p = NetProfile::xsede();
+        let healthy = stream_rate_mbps(&p, 1e-5);
+        for fault in [
+            FaultState {
+                extra_loss: 1e-3,
+                ..FaultState::clear()
+            },
+            FaultState {
+                rtt_factor: 4.0,
+                ..FaultState::clear()
+            },
+            FaultState {
+                capacity_factor: 0.01,
+                ..FaultState::clear()
+            },
+        ] {
+            let r = stream_rate_under_fault(&p, 1e-5, &fault);
+            assert!(r < healthy, "{fault:?}: {r} vs {healthy}");
         }
     }
 }

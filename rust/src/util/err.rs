@@ -1,0 +1,139 @@
+//! Minimal error handling replacing `anyhow`, which is unresolvable in
+//! this offline environment (DESIGN.md §4): a single string-backed
+//! [`Error`] with context chaining (`context` / `with_context` on both
+//! `Result` and `Option`), a [`crate::bail!`] macro and a `Result`
+//! alias.
+//!
+//! Context is flattened eagerly into one `a: b: c` chain, so both `{e}`
+//! and `{e:#}` print the full story — callers that formatted
+//! `anyhow::Error` with the alternate flag keep working unchanged.
+
+use std::fmt;
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A flattened error message chain.
+///
+/// Deliberately does *not* implement `std::error::Error`; that keeps
+/// the blanket `From<E: std::error::Error>` conversion below coherent
+/// (the same trick `anyhow` uses), so `?` works on `io::Error`,
+/// [`crate::util::json::ParseError`] and friends.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error(msg)
+    }
+}
+
+/// `anyhow::Context`-style adapters for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::err::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path/twophase")?;
+        Ok(())
+    }
+
+    fn bails(n: u32) -> Result<u32> {
+        if n > 3 {
+            bail!("n too large: {n}");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(bails(2).unwrap(), 2);
+        assert_eq!(bails(9).unwrap_err().to_string(), "n too large: 9");
+    }
+
+    #[test]
+    fn context_chains_on_result_and_option() {
+        let r: std::result::Result<(), &str> = Err("root cause");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root cause");
+        // alternate formatting prints the same full chain
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn nested_context_accumulates() {
+        let r: std::result::Result<(), &str> = Err("c");
+        let e = r.context("b").context("a").unwrap_err();
+        assert_eq!(e.to_string(), "a: b: c");
+    }
+}

@@ -4,6 +4,7 @@
 //! mini-framework and a wallclock bench harness.
 
 pub mod cli;
+pub mod err;
 pub mod json;
 pub mod linalg;
 pub mod prop;

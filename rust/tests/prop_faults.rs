@@ -1,0 +1,95 @@
+//! Property tests for the fault-injection subsystem (in-tree
+//! [`twophase::util::prop`] framework):
+//!
+//! * determinism — the same seed always yields the identical
+//!   fault-event sequence, on any profile and schedule config;
+//! * conservation — under injected faults, no chunk's measured
+//!   throughput exceeds the degraded link capacity in force when the
+//!   chunk started.
+
+use twophase::faults::{FaultEngine, FaultKind, FaultPlan, FaultPlanConfig};
+use twophase::sim::dataset::Dataset;
+use twophase::sim::engine::SimEnv;
+use twophase::sim::profile::NetProfile;
+use twophase::util::prop::run;
+use twophase::Params;
+
+#[test]
+fn same_seed_gives_identical_fault_sequence() {
+    run("same seed => identical fault-event sequence", 100, |g| {
+        let profiles = NetProfile::all();
+        let profile = &profiles[g.usize_in(0..=profiles.len() - 1)];
+        let cfg = FaultPlanConfig {
+            horizon_s: g.f64_in(600.0..14_400.0),
+            events_per_hour: g.f64_in(1.0..120.0),
+            intensity: g.f64_in(0.0..1.0),
+            kinds: FaultKind::all().to_vec(),
+        };
+        let seed = g.usize_in(0..=u32::MAX as usize) as u64;
+        let a = FaultPlan::generate(profile, &cfg, seed);
+        let b = FaultPlan::generate(profile, &cfg, seed);
+        assert_eq!(a, b, "seed {seed:#x} must reproduce its schedule");
+        // structural sanity on the generated schedule
+        assert!(a
+            .events
+            .windows(2)
+            .all(|w| w[0].t_start_s <= w[1].t_start_s));
+        assert!(a.events.iter().all(|e| {
+            e.t_start_s >= 0.0 && e.t_start_s < cfg.horizon_s && e.duration_s > 0.0
+        }));
+    });
+}
+
+#[test]
+fn delivered_bytes_respect_degraded_capacity() {
+    // Stalls are excluded so every chunk starts exactly at the previous
+    // sample's t_s (stall dead time would shift the start without a
+    // sample recording it); capacity conservation is about the
+    // bandwidth-shaping kinds anyway.
+    let kinds = vec![
+        FaultKind::LinkDegradation,
+        FaultKind::LossBurst,
+        FaultKind::RttInflation,
+        FaultKind::TrafficSurge,
+    ];
+    run("throughput <= degraded capacity at chunk start", 40, |g| {
+        let profiles = NetProfile::all();
+        let profile = profiles[g.usize_in(0..=profiles.len() - 1)].clone();
+        let cfg = FaultPlanConfig {
+            horizon_s: 7_200.0,
+            events_per_hour: g.f64_in(20.0..120.0),
+            intensity: g.f64_in(0.2..1.0),
+            kinds: kinds.clone(),
+        };
+        let seed = g.usize_in(0..=u32::MAX as usize) as u64;
+        let plan = FaultPlan::generate(&profile, &cfg, seed);
+        let engine = FaultEngine::new(plan.clone());
+
+        let menu = [
+            Params::new(1, 1, 1),
+            Params::new(4, 2, 4),
+            Params::new(8, 4, 8),
+            Params::new(16, 8, 8),
+        ];
+        let params = menu[g.usize_in(0..=menu.len() - 1)];
+        let dataset = Dataset::new(64, g.f64_in(64.0..512.0));
+        let chunk_mb = g.f64_in(256.0..2_048.0);
+
+        let mut env = SimEnv::new(profile.clone(), seed ^ 0x51).with_faults(plan);
+        let out = env.run_transfer(&dataset, chunk_mb, |_, _| params);
+
+        let mut chunk_start_s = 0.0;
+        for s in &out.samples {
+            let cap =
+                profile.bandwidth_mbps * engine.state_at(chunk_start_s).capacity_factor;
+            assert!(
+                s.throughput_mbps <= cap * (1.0 + 1e-9),
+                "chunk starting at t={chunk_start_s:.1}s on {} delivered \
+                 {:.1} Mbps > degraded capacity {cap:.1} Mbps (seed {seed:#x})",
+                profile.name,
+                s.throughput_mbps,
+            );
+            chunk_start_s = s.t_s;
+        }
+    });
+}

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 gate: build, test, lint from rust/ (see ROADMAP.md).
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH; install a Rust toolchain to run tier-1 checks" >&2
+    exit 1
+fi
+
+cargo build --release
+cargo test -q
+cargo clippy -- -D warnings
