@@ -1,0 +1,132 @@
+//! Parallelism + caching bench: times the offline knowledge-base build
+//! serial (`PALLAS_THREADS=1`) vs parallel, proves the two builds are
+//! bit-identical via `KnowledgeBase::digest`, then measures the
+//! historical tuning cache's hit rate on a repeat workload.  Writes
+//! `BENCH_parallel.json` (parsed by the CI bench-smoke step).
+//! `harness = false`.
+
+use std::sync::Arc;
+
+use twophase::baselines::ann_ot::AnnOtModel;
+use twophase::baselines::api::OptimizerKind;
+use twophase::baselines::static_ann::StaticAnnModel;
+use twophase::coordinator::orchestrator::{Orchestrator, OrchestratorConfig, TransferRequest};
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::sim::dataset::Dataset;
+use twophase::sim::profile::NetProfile;
+use twophase::util::json::Value;
+use twophase::util::par;
+use twophase::util::timer::time_once;
+
+fn env_or<T: std::str::FromStr>(name: &str, default: T) -> T {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let days: f64 = env_or("TWOPHASE_DAYS", 7.0);
+    let reps: usize = env_or("TWOPHASE_REPS", 3);
+    let profile = NetProfile::xsede();
+    let logs = generate_history(
+        &profile,
+        &GeneratorConfig {
+            days,
+            transfers_per_hour: 8.0,
+            seed: 42,
+        },
+    );
+
+    // --- serial vs parallel knowledge-base build ----------------------
+    let orig_threads = std::env::var("PALLAS_THREADS").ok();
+    std::env::set_var("PALLAS_THREADS", "1");
+    let (kb_serial, t_serial) =
+        time_once(|| KnowledgeBase::build_native(logs.clone(), OfflineConfig::default()));
+    match &orig_threads {
+        Some(v) => std::env::set_var("PALLAS_THREADS", v),
+        None => std::env::remove_var("PALLAS_THREADS"),
+    }
+    let threads = par::max_threads();
+    let (kb_par, t_par) =
+        time_once(|| KnowledgeBase::build_native(logs.clone(), OfflineConfig::default()));
+
+    let digest_serial = kb_serial.digest();
+    let digest_par = kb_par.digest();
+    assert_eq!(
+        digest_serial, digest_par,
+        "parallel knowledge-base build must be bit-identical to serial"
+    );
+    let speedup = t_serial.as_secs_f64() / t_par.as_secs_f64().max(1e-9);
+    println!(
+        "[bench] kb build ({days} days): serial {t_serial:?} vs {threads} threads \
+         {t_par:?} ({speedup:.2}x, digests agree)"
+    );
+
+    // --- tuning-cache hit rate on a repeat workload -------------------
+    // round 0 is all cold (distinct fingerprints via distinct file
+    // counts); round 1 replays the same requests and must warm-start
+    let sp = Arc::new(StaticAnnModel::train(&logs, 32, 0xE1));
+    let annot = Arc::new(AnnOtModel::train(&logs, 32, 0xE2));
+    let orch = Orchestrator::new(
+        Arc::new(kb_par),
+        sp,
+        annot,
+        OrchestratorConfig {
+            cache_capacity: 16,
+            ..OrchestratorConfig::default()
+        },
+    );
+    let mut warm_samples = 0usize;
+    for round in 0..2usize {
+        for rep in 0..reps {
+            let req = TransferRequest {
+                id: (round * reps + rep) as u64 + 1,
+                profile: profile.clone(),
+                dataset: Dataset::new(64 << rep.min(8), 512.0),
+                model: OptimizerKind::Asm,
+                seed: 7 + rep as u64,
+                phase_s: 3.0 * 3600.0,
+            };
+            let report = orch.execute(&req);
+            if round == 1 {
+                warm_samples += report.sample_transfers;
+            }
+        }
+    }
+    let stats = orch.cache_stats();
+    println!(
+        "[bench] tuning cache over {} transfers: {} hits / {} misses \
+         (hit rate {:.0}%, {warm_samples} sample transfers on the warm round)",
+        2 * reps,
+        stats.hits,
+        stats.misses,
+        stats.hit_rate() * 100.0
+    );
+
+    let out = Value::obj(vec![
+        ("bench", Value::str("exp_parallel")),
+        ("days", Value::Num(days)),
+        ("reps", Value::Num(reps as f64)),
+        ("threads", Value::Num(threads as f64)),
+        ("build_serial_s", Value::Num(t_serial.as_secs_f64())),
+        ("build_parallel_s", Value::Num(t_par.as_secs_f64())),
+        ("speedup", Value::Num(speedup)),
+        ("digest_match", Value::Bool(digest_serial == digest_par)),
+        (
+            "cache",
+            Value::obj(vec![
+                ("hits", Value::Num(stats.hits as f64)),
+                ("misses", Value::Num(stats.misses as f64)),
+                ("insertions", Value::Num(stats.insertions as f64)),
+                ("evictions", Value::Num(stats.evictions as f64)),
+                ("hit_rate", Value::Num(stats.hit_rate())),
+                ("warm_round_samples", Value::Num(warm_samples as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_parallel.json", format!("{out}\n"))
+        .expect("write BENCH_parallel.json");
+    println!("[bench] exp_parallel wrote BENCH_parallel.json");
+}

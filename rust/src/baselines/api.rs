@@ -23,6 +23,14 @@ pub trait Optimizer {
     fn samples_used(&self) -> usize {
         0
     }
+
+    /// Converged operating point worth memoizing in the coordinator's
+    /// historical tuning cache, if the model has one.  Only the ASM
+    /// implements this (it is the model whose probing the cache
+    /// short-circuits); baselines return None.
+    fn cache_entry(&self) -> Option<crate::offline::cache::CachedTuning> {
+        None
+    }
 }
 
 /// Identifier for the seven evaluated models (drives the Fig 5 matrix).
@@ -109,6 +117,18 @@ impl Optimizer for AsmOptimizer {
 
     fn samples_used(&self) -> usize {
         self.tuner.samples_used()
+    }
+
+    fn cache_entry(&self) -> Option<crate::offline::cache::CachedTuning> {
+        use crate::online::asm::AsmPhase;
+        if self.tuner.phase() != AsmPhase::Streaming {
+            return None;
+        }
+        Some(crate::offline::cache::CachedTuning {
+            params: self.tuner.params(),
+            predicted_mbps: self.tuner.predicted(),
+            bucket: self.tuner.asm().current_bucket(),
+        })
     }
 }
 

@@ -8,6 +8,8 @@
 use crate::sim::engine::TransferOutcome;
 use crate::Params;
 
+pub use crate::offline::cache::CacheStats;
+
 /// Eq-21 style accuracy in percent.
 pub fn accuracy_pct(achieved: f64, predicted: f64) -> f64 {
     if predicted <= 0.0 {
@@ -33,6 +35,11 @@ pub struct TransferReport {
     /// volume-weighted throughput of the *streaming* phase only (the
     /// paper compares steady-state achievable throughput)
     pub steady_throughput_mbps: f64,
+    /// historical-tuning-cache verdict for this transfer: `Some(true)`
+    /// warm-started from a cached operating point, `Some(false)` was a
+    /// recorded miss, `None` means the cache was not consulted
+    /// (disabled, or a non-ASM model)
+    pub cache_hit: Option<bool>,
 }
 
 impl TransferReport {
@@ -74,6 +81,7 @@ impl TransferReport {
                 .map(|c| c.params)
                 .unwrap_or(Params::DEFAULT),
             steady_throughput_mbps: steady_th,
+            cache_hit: None,
         }
     }
 }

@@ -15,6 +15,7 @@ use crate::coordinator::metrics::TransferReport;
 use crate::coordinator::scheduler::{plan_chunks, SchedulerConfig};
 use crate::coordinator::state::TransferState;
 use crate::faults::FaultPlan;
+use crate::offline::cache::{CacheStats, Fingerprint, TuningCache};
 use crate::offline::pipeline::KnowledgeBase;
 use crate::online::controller::{DynamicTuner, TunerConfig};
 use crate::sim::dataset::Dataset;
@@ -42,6 +43,11 @@ pub struct OrchestratorConfig {
     /// chunks transferred at sample size before switching to stream
     /// size (covers every model's probing phase)
     pub sampling_chunks: usize,
+    /// capacity of the historical tuning cache; 0 (the default)
+    /// disables it, keeping every run a cold start — experiments need
+    /// cold-start comparability, and repeated identical requests must
+    /// stay bit-identical whether run sequentially or batched
+    pub cache_capacity: usize,
 }
 
 impl Default for OrchestratorConfig {
@@ -51,6 +57,7 @@ impl Default for OrchestratorConfig {
             scheduler: SchedulerConfig::default(),
             tuner: TunerConfig::default(),
             sampling_chunks: 6,
+            cache_capacity: 0,
         }
     }
 }
@@ -90,6 +97,9 @@ pub struct Orchestrator {
     pub sp_model: Arc<StaticAnnModel>,
     pub annot_model: Arc<AnnOtModel>,
     pub cfg: OrchestratorConfig,
+    /// historical tuning cache (Mutex keeps the orchestrator usable
+    /// from `run_batch`'s worker threads)
+    cache: Mutex<TuningCache>,
 }
 
 impl Orchestrator {
@@ -99,12 +109,23 @@ impl Orchestrator {
         annot_model: Arc<AnnOtModel>,
         cfg: OrchestratorConfig,
     ) -> Orchestrator {
+        let cache = Mutex::new(TuningCache::new(cfg.cache_capacity.max(1)));
         Orchestrator {
             kb,
             sp_model,
             annot_model,
             cfg,
+            cache,
         }
+    }
+
+    fn cache_enabled(&self) -> bool {
+        self.cfg.cache_capacity > 0
+    }
+
+    /// Snapshot of the tuning cache's hit/miss/eviction counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats()
     }
 
     /// Build the per-request optimizer.
@@ -148,6 +169,34 @@ impl Orchestrator {
         }
     }
 
+    /// Cache-aware optimizer build for the *initial* attempt of an ASM
+    /// transfer: consults the historical tuning cache and warm-starts
+    /// the controller on a hit.  Returns the optimizer plus the cache
+    /// verdict (`None` = cache not consulted: disabled or baseline
+    /// model).  The post-fault re-tune path deliberately bypasses this
+    /// — post-fault conditions rarely match the cached operating point.
+    fn build_optimizer_cached(&self, req: &TransferRequest) -> (Box<dyn Optimizer>, Option<bool>) {
+        if !self.cache_enabled() || req.model != OptimizerKind::Asm {
+            return (self.build_optimizer(req), None);
+        }
+        let p = &req.profile;
+        let d = &req.dataset;
+        let fp = Fingerprint::of(p.rtt_s, p.bandwidth_mbps, d.avg_file_mb, d.n_files);
+        let cached = self.cache.lock().unwrap().get(fp);
+        match cached {
+            Some(entry) => {
+                let set = self
+                    .kb
+                    .query(p.rtt_s, p.bandwidth_mbps, d.avg_file_mb, d.n_files)
+                    .expect("knowledge base has surfaces")
+                    .clone();
+                let tuner = DynamicTuner::with_cached(set, self.cfg.tuner.clone(), &entry);
+                (Box::new(AsmOptimizer::new(tuner)), Some(true))
+            }
+            None => (self.build_optimizer(req), Some(false)),
+        }
+    }
+
     /// Run one transfer to completion (synchronous).
     pub fn execute(&self, req: &TransferRequest) -> TransferReport {
         self.execute_with_faults(req, None).report
@@ -178,7 +227,7 @@ impl Orchestrator {
         if let Some(plan) = fault_plan {
             env = env.with_faults(plan);
         }
-        let mut optimizer = self.build_optimizer(req);
+        let (mut optimizer, cache_hit) = self.build_optimizer_cached(req);
         let mut state = TransferState::Queued;
         state.transition(TransferState::Sampling);
 
@@ -279,18 +328,33 @@ impl Orchestrator {
             state.transition(TransferState::Done);
         }
 
+        // memoize the converged operating point for future requests
+        // with the same (network, dataset) fingerprint
+        if completed && self.cache_enabled() && req.model == OptimizerKind::Asm {
+            if let Some(entry) = optimizer.cache_entry() {
+                let fp = Fingerprint::of(
+                    req.profile.rtt_s,
+                    req.profile.bandwidth_mbps,
+                    req.dataset.avg_file_mb,
+                    req.dataset.n_files,
+                );
+                self.cache.lock().unwrap().put(fp, entry);
+            }
+        }
+
         let outcome = TransferOutcome {
             total_mb: transferred,
             duration_s: env.now_s - start,
             samples,
         };
-        let report = TransferReport::from_outcome(
+        let mut report = TransferReport::from_outcome(
             optimizer.name(),
             req.profile.name,
             &outcome,
             optimizer.predicted_th(),
             optimizer.samples_used().min(self.cfg.sampling_chunks),
         );
+        report.cache_hit = cache_hit;
         RecoveryReport {
             report,
             retries,
@@ -444,6 +508,40 @@ mod tests {
     #[test]
     fn empty_batch() {
         assert!(orchestrator().run_batch(vec![]).is_empty());
+    }
+
+    #[test]
+    fn tuning_cache_warm_starts_repeat_fingerprints() {
+        let base = orchestrator();
+        let orch = Orchestrator::new(
+            Arc::clone(&base.kb),
+            Arc::clone(&base.sp_model),
+            Arc::clone(&base.annot_model),
+            OrchestratorConfig {
+                cache_capacity: 8,
+                ..OrchestratorConfig::default()
+            },
+        );
+        let req = request(1, OptimizerKind::Asm);
+
+        let cold = orch.execute(&req);
+        assert_eq!(cold.cache_hit, Some(false));
+        let s = orch.cache_stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (0, 1, 1));
+
+        let warm = orch.execute(&req);
+        assert_eq!(warm.cache_hit, Some(true));
+        assert_eq!(warm.sample_transfers, 0, "warm start skips probing");
+        assert_eq!(orch.cache_stats().hits, 1);
+        // both runs stream the full dataset either way
+        assert!((warm.total_mb - cold.total_mb).abs() < 1e-6);
+
+        // baselines never consult the cache …
+        let noopt = orch.execute(&request(2, OptimizerKind::NoOpt));
+        assert_eq!(noopt.cache_hit, None);
+        assert_eq!(orch.cache_stats().hits + orch.cache_stats().misses, 2);
+        // … and the default config keeps it disabled entirely
+        assert_eq!(base.execute(&req).cache_hit, None);
     }
 
     fn stall(t_start_s: f64, duration_s: f64) -> crate::faults::FaultPlan {

@@ -80,6 +80,21 @@ pub fn ctx() -> &'static ExperimentContext {
     CTX.get_or_init(ExperimentContext::build)
 }
 
+/// Fan an experiment's independent cells out over the deterministic
+/// thread pool ([`crate::util::par`]).  Every cell's seed and request
+/// id must be a pure function of its index — never of execution order
+/// — so the output is bit-identical for any `PALLAS_THREADS` setting
+/// (threads = 1 recovers the serial loop exactly).  Results come back
+/// in cell order.
+pub fn par_cells<T, U, F>(cells: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    crate::util::par::par_map(cells, f)
+}
+
 /// Repetitions per cell (`TWOPHASE_REPS` overrides; default 3).
 pub fn reps() -> usize {
     std::env::var("TWOPHASE_REPS")

@@ -2,7 +2,7 @@
 //! networks × three dataset classes × peak/off-peak hours.
 
 use crate::baselines::api::OptimizerKind;
-use crate::experiments::common::{ctx, reps, request};
+use crate::experiments::common::{ctx, par_cells, reps, request};
 use crate::sim::dataset::FileSizeClass;
 use crate::sim::profile::NetProfile;
 use crate::util::stats;
@@ -73,34 +73,38 @@ pub fn networks() -> [NetProfile; 3] {
 pub fn run() -> Fig5Result {
     let c = ctx();
     let r = reps();
-    let mut cells = Vec::new();
-    let mut id = 0u64;
-
+    let mut units = Vec::new();
     for profile in networks() {
         for class in FileSizeClass::all() {
             for peak in [false, true] {
                 for model in fig5_models() {
-                    let mut ths = Vec::with_capacity(r);
-                    for rep in 0..r {
-                        id += 1;
-                        let req = request(id, &profile, class, model, peak, rep);
-                        let report = c.orchestrator.execute(&req);
-                        // the paper reports end-to-end achieved
-                        // throughput: total bytes / total wall time,
-                        // sampling and re-tuning overhead included
-                        ths.push(report.avg_throughput_mbps);
-                    }
-                    cells.push(Fig5Cell {
-                        network: profile.name,
-                        class,
-                        peak,
-                        model,
-                        mean_throughput_mbps: stats::mean(&ths),
-                    });
+                    units.push((profile.clone(), class, peak, model));
                 }
             }
         }
     }
+    // every request id is a pure function of (cell index, rep) —
+    // exactly the sequence the old serial nested loop handed out — so
+    // the fan-out is bit-identical at any thread count
+    let cells: Vec<Fig5Cell> = par_cells(&units, |ci, (profile, class, peak, model)| {
+        let mut ths = Vec::with_capacity(r);
+        for rep in 0..r {
+            let id = (ci * r + rep) as u64 + 1;
+            let req = request(id, profile, *class, *model, *peak, rep);
+            let report = c.orchestrator.execute(&req);
+            // the paper reports end-to-end achieved throughput: total
+            // bytes / total wall time, sampling and re-tuning overhead
+            // included
+            ths.push(report.avg_throughput_mbps);
+        }
+        Fig5Cell {
+            network: profile.name,
+            class: *class,
+            peak: *peak,
+            model: *model,
+            mean_throughput_mbps: stats::mean(&ths),
+        }
+    });
 
     // print one paper-style panel table per network
     for profile in networks() {

@@ -9,7 +9,7 @@
 
 use crate::baselines::api::{AsmOptimizer, OptimizerKind};
 use crate::coordinator::metrics::accuracy_pct;
-use crate::experiments::common::{ctx, request, OFFPEAK_PHASE_S, PEAK_PHASE_S};
+use crate::experiments::common::{ctx, par_cells, request, OFFPEAK_PHASE_S, PEAK_PHASE_S};
 use crate::sim::dataset::FileSizeClass;
 use crate::sim::engine::SimEnv;
 use crate::sim::profile::NetProfile;
@@ -25,47 +25,59 @@ const MAX_K: usize = 5;
 
 fn accuracy_curve(model: OptimizerKind) -> Vec<f64> {
     let c = ctx();
-    let mut per_k: Vec<Vec<f64>> = vec![Vec::new(); MAX_K];
-    let mut id = 7000 + model.label().len() as u64 * 100;
-
+    let base = 7000 + model.label().len() as u64 * 100;
+    let mut units = Vec::new();
     for class in FileSizeClass::all() {
         for peak in [false, true] {
             for rep in 0..2 {
-                id += 1;
-                let profile = NetProfile::xsede();
-                let req = request(id, &profile, class, model, peak, rep);
-                let mut env =
-                    SimEnv::new(req.profile.clone(), req.seed).with_phase(if peak {
-                        PEAK_PHASE_S
-                    } else {
-                        OFFPEAK_PHASE_S
-                    });
-                let mut opt = c.orchestrator.build_optimizer(&req);
-                let mut last = None;
-                let mut prev = None;
-                for k in 0..MAX_K {
-                    // one sample transfer
-                    let params = opt.next_params(last);
-                    let chunk = req.dataset.sample_chunk(0.01);
-                    let (th, _) = env.transfer_chunk(params, &chunk, prev);
-                    last = Some(th);
-                    prev = Some(params);
-                    // validation: penalty-free steady measurement at the
-                    // model's current operating point vs its prediction
-                    if let Some(pred) = opt.predicted_th() {
-                        let probe_params = opt.next_params(last);
-                        let load = env.load_now();
-                        let achieved =
-                            env.model
-                                .sample(probe_params, &req.dataset, &load, &mut env.rng);
-                        per_k[k].push(accuracy_pct(achieved, pred));
-                        // keep the optimizer's state machine consistent:
-                        // the probe result is also its next feedback
-                        last = Some(achieved);
-                        prev = Some(probe_params);
-                    }
-                }
+                units.push((class, peak, rep));
             }
+        }
+    }
+    // each (class, peak, rep) cell owns its SimEnv and optimizer, so
+    // the fan-out is independent; ids replay the serial sequence
+    // (base + 1, base + 2, …) and the per-k merge runs in cell order
+    let per_cell = par_cells(&units, |ci, &(class, peak, rep)| {
+        let id = base + ci as u64 + 1;
+        let profile = NetProfile::xsede();
+        let req = request(id, &profile, class, model, peak, rep);
+        let mut env = SimEnv::new(req.profile.clone(), req.seed).with_phase(if peak {
+            PEAK_PHASE_S
+        } else {
+            OFFPEAK_PHASE_S
+        });
+        let mut opt = c.orchestrator.build_optimizer(&req);
+        let mut last = None;
+        let mut prev = None;
+        let mut cell_k: Vec<Vec<f64>> = vec![Vec::new(); MAX_K];
+        for k in 0..MAX_K {
+            // one sample transfer
+            let params = opt.next_params(last);
+            let chunk = req.dataset.sample_chunk(0.01);
+            let (th, _) = env.transfer_chunk(params, &chunk, prev);
+            last = Some(th);
+            prev = Some(params);
+            // validation: penalty-free steady measurement at the
+            // model's current operating point vs its prediction
+            if let Some(pred) = opt.predicted_th() {
+                let probe_params = opt.next_params(last);
+                let load = env.load_now();
+                let achieved = env
+                    .model
+                    .sample(probe_params, &req.dataset, &load, &mut env.rng);
+                cell_k[k].push(accuracy_pct(achieved, pred));
+                // keep the optimizer's state machine consistent:
+                // the probe result is also its next feedback
+                last = Some(achieved);
+                prev = Some(probe_params);
+            }
+        }
+        cell_k
+    });
+    let mut per_k: Vec<Vec<f64>> = vec![Vec::new(); MAX_K];
+    for cell in per_cell {
+        for (k, vs) in cell.into_iter().enumerate() {
+            per_k[k].extend(vs);
         }
     }
     per_k.into_iter().map(|v| stats::mean(&v)).collect()

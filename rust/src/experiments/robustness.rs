@@ -14,7 +14,7 @@
 
 use crate::baselines::api::OptimizerKind;
 use crate::coordinator::orchestrator::TransferRequest;
-use crate::experiments::common::{ctx, reps, OFFPEAK_PHASE_S};
+use crate::experiments::common::{ctx, par_cells, reps, OFFPEAK_PHASE_S};
 use crate::faults::{FaultPlan, FaultPlanConfig};
 use crate::sim::dataset::Dataset;
 use crate::sim::profile::NetProfile;
@@ -97,9 +97,13 @@ fn request_for(model: OptimizerKind, rep: usize, id: u64) -> TransferRequest {
 pub fn run() -> RobustnessResult {
     let orch = &ctx().orchestrator;
     let n_reps = reps();
-    let mut cells = Vec::new();
 
-    for (mi, &model) in MODELS.iter().enumerate() {
+    // one pool unit per model: seeds and fault schedules are pure
+    // functions of (model index, intensity index, rep), so the fan-out
+    // reproduces the serial sweep bit-for-bit; flattening in model
+    // order restores the serial cell order
+    let units: Vec<(usize, OptimizerKind)> = MODELS.iter().copied().enumerate().collect();
+    let per_model = par_cells(&units, |_, &(mi, model)| {
         let requests: Vec<TransferRequest> = (0..n_reps)
             .map(|rep| request_for(model, rep, (mi * 100 + rep) as u64))
             .collect();
@@ -108,6 +112,7 @@ pub fn run() -> RobustnessResult {
             .map(|r| orch.execute(r).avg_throughput_mbps)
             .collect();
 
+        let mut model_cells = Vec::with_capacity(INTENSITIES.len());
         for (ii, &intensity) in INTENSITIES.iter().enumerate() {
             let mut faulted = 0.0;
             let mut retries = 0.0;
@@ -125,7 +130,7 @@ pub fn run() -> RobustnessResult {
             }
             let clean_mean = clean.iter().sum::<f64>() / n_reps as f64;
             let faulted_mean = faulted / n_reps as f64;
-            cells.push(RobustnessCell {
+            model_cells.push(RobustnessCell {
                 model,
                 intensity,
                 clean_mbps: clean_mean,
@@ -135,7 +140,9 @@ pub fn run() -> RobustnessResult {
                 completion_rate: completions as f64 / n_reps as f64,
             });
         }
-    }
+        model_cells
+    });
+    let cells: Vec<RobustnessCell> = per_model.into_iter().flatten().collect();
 
     let mut t = Table::new(&[
         "model",

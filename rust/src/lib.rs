@@ -6,7 +6,11 @@
 //!
 //! * [`util`] — in-tree replacements for crates unavailable offline
 //!   (seeded RNG, JSON, CLI parsing, stats, linear algebra, a
-//!   property-testing mini-framework and a bench harness);
+//!   property-testing mini-framework, a bench harness, and
+//!   [`util::par`]: a deterministic scoped thread pool whose ordered
+//!   reduction keeps every parallel result bit-identical to serial —
+//!   `PALLAS_THREADS` overrides the worker count, `=1` is the serial
+//!   path);
 //! * [`sim`] — the testbed substrate: a mechanistic wide-area transfer
 //!   simulator (TCP streams, endpoints, background traffic, shared
 //!   bottleneck links) standing in for XSEDE / DIDCLAB / Chameleon;
@@ -19,7 +23,10 @@
 //! * [`offline`] — the paper's offline phase: log clustering
 //!   (K-means++ / HAC + CH index), piecewise bicubic throughput
 //!   surfaces, Gaussian confidence regions, Hessian maxima, sampling
-//!   regions, and the five-phase additive pipeline;
+//!   regions, the five-phase additive pipeline (hot loops fanned out
+//!   over [`util::par`]), and [`offline::cache`]: an LRU historical
+//!   tuning cache that warm-starts the online controller on repeat
+//!   (network, dataset) fingerprints;
 //! * [`online`] — the paper's online phase: the Adaptive Sampling
 //!   Module (Algorithm 1), deviation monitoring and dynamic re-tuning;
 //! * [`baselines`] — the seven comparison models of §5 (GO, SP, SC,

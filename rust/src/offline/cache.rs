@@ -1,0 +1,246 @@
+//! Historical tuning cache: memoizes converged ASM operating points.
+//!
+//! The paper's core argument is that historical knowledge makes online
+//! probing cheap; this module closes the remaining loop by remembering
+//! the *outcome* of each ASM run.  A transfer request is reduced to a
+//! discretized [`Fingerprint`] of its network profile and dataset
+//! signature; when a later request lands in the same buckets, the
+//! controller warm-starts the Adaptive Sampling Module at the cached
+//! knowledge-base bucket instead of re-running the Algorithm-1
+//! bisection from scratch.  The deviation monitor still guards against
+//! stale entries — a warm start that no longer matches live conditions
+//! trips the ordinary re-tuning path.
+//!
+//! The cache is a fixed-capacity LRU built from `std` only: a
+//! `HashMap` plus a monotonic access tick, with O(n) min-tick eviction
+//! (capacities are tens of entries, not thousands).  Hit/miss/eviction
+//! counters are surfaced through `coordinator::metrics`.
+
+use std::collections::HashMap;
+
+use crate::Params;
+
+/// Discretized (network, dataset) signature.
+///
+/// Continuous quantities are bucketed on a half-octave log2 grid
+/// (`round(log2(v) * 2)` — resolution factor ≈ 1.41×) so that runs
+/// with near-identical conditions collide while genuinely different
+/// regimes stay apart.  File count uses whole octaves: load scales
+/// weakly with it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint {
+    /// Half-octave bucket of round-trip time (seconds).
+    pub rtt_bucket: i32,
+    /// Half-octave bucket of bottleneck bandwidth (Mbps).
+    pub bw_bucket: i32,
+    /// Half-octave bucket of mean file size (MB).
+    pub file_bucket: i32,
+    /// Octave bucket of file count.
+    pub count_bucket: i32,
+}
+
+/// Half-octave log2 bucket of a positive quantity.
+fn half_octave(v: f64) -> i32 {
+    (v.max(1e-9).log2() * 2.0).round() as i32
+}
+
+impl Fingerprint {
+    pub fn of(rtt_s: f64, bandwidth_mbps: f64, avg_file_mb: f64, n_files: u64) -> Fingerprint {
+        Fingerprint {
+            rtt_bucket: half_octave(rtt_s),
+            bw_bucket: half_octave(bandwidth_mbps),
+            file_bucket: half_octave(avg_file_mb),
+            count_bucket: (n_files as f64 + 1.0).log2().round() as i32,
+        }
+    }
+}
+
+/// A converged tuning decision worth replaying.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CachedTuning {
+    /// Converged protocol parameters.
+    pub params: Params,
+    /// Throughput the knowledge base predicted for them (Mbps).
+    pub predicted_mbps: f64,
+    /// Index of the load-intensity bucket the ASM converged to —
+    /// the warm-start anchor for `online::asm`.
+    pub bucket: usize,
+}
+
+/// Monotonic counters describing cache effectiveness.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups that hit; 0 when no lookups happened.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Fixed-capacity LRU map from [`Fingerprint`] to [`CachedTuning`].
+#[derive(Debug)]
+pub struct TuningCache {
+    cap: usize,
+    map: HashMap<Fingerprint, (CachedTuning, u64)>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl TuningCache {
+    /// `cap` is clamped to at least 1 entry.
+    pub fn new(cap: usize) -> TuningCache {
+        TuningCache {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Look up a fingerprint, bumping its recency on hit and counting
+    /// the outcome either way.
+    pub fn get(&mut self, fp: Fingerprint) -> Option<CachedTuning> {
+        self.tick += 1;
+        match self.map.get_mut(&fp) {
+            Some((tuning, tick)) => {
+                *tick = self.tick;
+                self.stats.hits += 1;
+                Some(*tuning)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert or refresh an entry, evicting the least-recently-used
+    /// fingerprint when over capacity.  Ties on recency (possible only
+    /// across distinct ticks is impossible; ticks are unique) never
+    /// arise, so eviction is deterministic.
+    pub fn put(&mut self, fp: Fingerprint, tuning: CachedTuning) {
+        self.tick += 1;
+        let fresh = self.map.insert(fp, (tuning, self.tick)).is_none();
+        if fresh {
+            self.stats.insertions += 1;
+        }
+        while self.map.len() > self.cap {
+            // O(n) min-tick scan; cap is small by construction.
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, tick))| *tick)
+                .map(|(fp, _)| *fp)
+                .expect("non-empty map over capacity");
+            self.map.remove(&oldest);
+            self.stats.evictions += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Drop all entries; counters are preserved (they are lifetime
+    /// totals, not window totals).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tuning(bucket: usize) -> CachedTuning {
+        CachedTuning {
+            params: Params::new(4, 2, 8),
+            predicted_mbps: 1000.0 + bucket as f64,
+            bucket,
+        }
+    }
+
+    #[test]
+    fn fingerprint_buckets_cluster_similar_conditions() {
+        let a = Fingerprint::of(0.040, 1000.0, 512.0, 64);
+        let b = Fingerprint::of(0.042, 1050.0, 540.0, 70);
+        assert_eq!(a, b);
+        let far = Fingerprint::of(0.120, 100.0, 8.0, 2000);
+        assert_ne!(a, far);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut cache = TuningCache::new(2);
+        let f1 = Fingerprint::of(0.01, 100.0, 10.0, 10);
+        let f2 = Fingerprint::of(0.10, 1000.0, 100.0, 100);
+        let f3 = Fingerprint::of(1.00, 10000.0, 1000.0, 1000);
+        cache.put(f1, tuning(1));
+        cache.put(f2, tuning(2));
+        // Touch f1 so f2 becomes the LRU entry.
+        assert!(cache.get(f1).is_some());
+        cache.put(f3, tuning(3));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(f2).is_none(), "LRU entry should be evicted");
+        assert!(cache.get(f1).is_some());
+        assert!(cache.get(f3).is_some());
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(cache.stats().insertions, 3);
+    }
+
+    #[test]
+    fn refresh_does_not_count_as_insertion_or_grow() {
+        let mut cache = TuningCache::new(2);
+        let f1 = Fingerprint::of(0.01, 100.0, 10.0, 10);
+        cache.put(f1, tuning(1));
+        cache.put(f1, tuning(9));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().insertions, 1);
+        assert_eq!(cache.get(f1).unwrap().bucket, 9);
+    }
+
+    #[test]
+    fn hit_rate_counts_lookups() {
+        let mut cache = TuningCache::new(4);
+        let f1 = Fingerprint::of(0.01, 100.0, 10.0, 10);
+        let f2 = Fingerprint::of(0.10, 1000.0, 100.0, 100);
+        assert!(cache.get(f1).is_none()); // miss
+        cache.put(f1, tuning(1));
+        assert!(cache.get(f1).is_some()); // hit
+        assert!(cache.get(f1).is_some()); // hit
+        assert!(cache.get(f2).is_none()); // miss
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (2, 2));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn capacity_zero_clamps_to_one() {
+        let mut cache = TuningCache::new(0);
+        let f1 = Fingerprint::of(0.01, 100.0, 10.0, 10);
+        let f2 = Fingerprint::of(0.10, 1000.0, 100.0, 100);
+        cache.put(f1, tuning(1));
+        cache.put(f2, tuning(2));
+        assert_eq!(cache.len(), 1);
+    }
+}

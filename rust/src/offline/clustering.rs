@@ -7,6 +7,7 @@ use crate::offline::chindex::ch_index;
 use crate::offline::features::{sqdist, FeatureScaler, N_FEATURES};
 use crate::offline::hac::upgma;
 use crate::offline::kmeans::{kmeans, KmeansBackend};
+use crate::util::par;
 use crate::util::rng::Rng;
 
 /// Which algorithm won the CH-index comparison.
@@ -80,17 +81,23 @@ fn assign_to_centroids(
     points: &[[f64; N_FEATURES]],
     centroids: &[[f64; N_FEATURES]],
 ) -> Vec<usize> {
-    points
-        .iter()
-        .map(|p| {
-            centroids
-                .iter()
-                .enumerate()
-                .min_by(|(_, a), (_, b)| sqdist(p, a).partial_cmp(&sqdist(p, b)).unwrap())
-                .map(|(i, _)| i)
-                .unwrap_or(0)
-        })
-        .collect()
+    // Per-point labels are independent; fixed 512-point chunks fan out
+    // over the pool with thread-invariant output order.
+    par::par_chunk_map(points, 512, |_, window| {
+        window
+            .iter()
+            .map(|p| {
+                centroids
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        sqdist(p, a).partial_cmp(&sqdist(p, b)).unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    })
 }
 
 /// Cluster a log corpus: fit the scaler, sweep k in 2..=k_max with both
@@ -107,48 +114,64 @@ pub fn cluster_logs(
         entries.iter().map(|e| scaler.transform(e)).collect();
     let mut rng = Rng::new(seed ^ 0x636c7573);
 
-    let mut best: Option<LogClustering> = None;
-    for k in 2..=k_max.max(2) {
-        // K-means++
-        let km = kmeans(&points, k, &mut rng, backend);
-        let km_score = ch_index(&points, &km.assignment);
-        let cand_km = LogClustering {
-            scaler: scaler.clone(),
-            centroids: km.centroids.clone(),
-            labels: km.assignment.clone(),
-            k,
-            algo: ClusterAlgo::KmeansPP,
-            ch_score: km_score,
-        };
-        if best.as_ref().map_or(true, |b| km_score > b.ch_score) {
-            best = Some(cand_km);
-        }
-
-        // HAC/UPGMA (subsampled when large)
-        let hac_labels = if points.len() <= HAC_MAX_POINTS {
-            upgma(&points, k)
-        } else {
-            let mut idx: Vec<usize> = (0..points.len()).collect();
-            rng.shuffle(&mut idx);
-            let sample: Vec<[f64; N_FEATURES]> = idx[..HAC_MAX_POINTS]
-                .iter()
-                .map(|&i| points[i])
-                .collect();
-            let sub_labels = upgma(&sample, k);
-            let cents = centroids_of(&sample, &sub_labels, k);
-            assign_to_centroids(&points, &cents)
-        };
-        let hac_score = ch_index(&points, &hac_labels);
-        if best.as_ref().map_or(true, |b| hac_score > b.ch_score) {
-            let cents = centroids_of(&points, &hac_labels, k);
-            best = Some(LogClustering {
+    // Each k of the sweep is an independent unit: draw its RNG seed
+    // up front (serially, so the seed sequence is fixed) and fan the
+    // units out over the pool.  Both algorithm candidates for one k
+    // are produced by the same unit.
+    let units: Vec<(usize, u64)> = (2..=k_max.max(2))
+        .map(|k| (k, rng.next_u64()))
+        .collect();
+    let candidates: Vec<(LogClustering, LogClustering)> =
+        par::par_map(&units, |_, &(k, unit_seed)| {
+            let mut rng = Rng::new(unit_seed);
+            // K-means++
+            let km = kmeans(&points, k, &mut rng, backend);
+            let km_score = ch_index(&points, &km.assignment);
+            let cand_km = LogClustering {
                 scaler: scaler.clone(),
-                centroids: cents,
+                centroids: km.centroids,
+                labels: km.assignment,
+                k,
+                algo: ClusterAlgo::KmeansPP,
+                ch_score: km_score,
+            };
+
+            // HAC/UPGMA (subsampled when large)
+            let hac_labels = if points.len() <= HAC_MAX_POINTS {
+                upgma(&points, k)
+            } else {
+                let mut idx: Vec<usize> = (0..points.len()).collect();
+                rng.shuffle(&mut idx);
+                let sample: Vec<[f64; N_FEATURES]> = idx[..HAC_MAX_POINTS]
+                    .iter()
+                    .map(|&i| points[i])
+                    .collect();
+                let sub_labels = upgma(&sample, k);
+                let cents = centroids_of(&sample, &sub_labels, k);
+                assign_to_centroids(&points, &cents)
+            };
+            let hac_score = ch_index(&points, &hac_labels);
+            let cand_hac = LogClustering {
+                scaler: scaler.clone(),
+                centroids: centroids_of(&points, &hac_labels, k),
                 labels: hac_labels,
                 k,
                 algo: ClusterAlgo::HacUpgma,
                 ch_score: hac_score,
-            });
+            };
+            (cand_km, cand_hac)
+        });
+
+    // CH-best selection stays serial and in k order (K-means++ before
+    // HAC within each k, strict `>`), so the winner is the one the
+    // sequential sweep would have kept.
+    let mut best: Option<LogClustering> = None;
+    for (cand_km, cand_hac) in candidates {
+        if best.as_ref().map_or(true, |b| cand_km.ch_score > b.ch_score) {
+            best = Some(cand_km);
+        }
+        if best.as_ref().map_or(true, |b| cand_hac.ch_score > b.ch_score) {
+            best = Some(cand_hac);
         }
     }
     best.expect("k sweep produced at least one candidate")

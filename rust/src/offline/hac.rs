@@ -3,10 +3,16 @@
 //!
 //! UPGMA merges the pair of clusters with minimum average inter-point
 //! distance; implemented with a Lance–Williams update on the proximity
-//! matrix (O(n³) worst case — the pipeline subsamples large corpora
-//! before calling this, as noted in DESIGN.md).
+//! matrix.  The proximity matrix is built in parallel (one row per
+//! pool unit, see `util::par`), and a per-row nearest-neighbour cache
+//! (`row_min[i]` = closest active `j > i`) turns each merge's pair
+//! search into an O(n) scan over cached minima instead of an O(n²)
+//! matrix rescan — only rows whose cached neighbour was touched by the
+//! merge are recomputed.  The pipeline still subsamples large corpora
+//! before calling this, as noted in DESIGN.md.
 
 use crate::offline::features::{sqdist, N_FEATURES};
+use crate::util::par;
 
 /// Cut the UPGMA dendrogram at `k` clusters; returns per-point labels
 /// in 0..k (labels are compacted).
@@ -21,36 +27,63 @@ pub fn upgma(points: &[[f64; N_FEATURES]], k: usize) -> Vec<usize> {
     // active cluster list: (members, size)
     let mut members: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
     let mut active: Vec<bool> = vec![true; n];
-    // proximity matrix of average inter-cluster distances (Euclidean)
-    let mut dist = vec![vec![0.0f64; n]; n];
-    for i in 0..n {
+    // proximity matrix of average inter-cluster distances (Euclidean),
+    // built row-parallel; (i,j) and (j,i) compute the identical value.
+    let idx: Vec<usize> = (0..n).collect();
+    let mut dist: Vec<Vec<f64>> = par::par_map(&idx, |_, &i| {
+        (0..n)
+            .map(|j| {
+                if j == i {
+                    0.0
+                } else {
+                    sqdist(&points[i], &points[j]).sqrt()
+                }
+            })
+            .collect()
+    });
+
+    // row_min[i]: (argmin j, distance) over active j > i, scanning j
+    // ascending with a strict `<` so ties keep the lowest j — exactly
+    // the pair the full lexicographic rescan would select.
+    let recompute_row = |dist: &[Vec<f64>], active: &[bool], i: usize| -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
         for j in i + 1..n {
-            let d = sqdist(&points[i], &points[j]).sqrt();
-            dist[i][j] = d;
-            dist[j][i] = d;
+            if !active[j] {
+                continue;
+            }
+            let d = dist[i][j];
+            let better = match best {
+                None => true,
+                Some((_, bd)) => d < bd,
+            };
+            if better {
+                best = Some((j, d));
+            }
         }
-    }
+        best
+    };
+    let mut row_min: Vec<Option<(usize, f64)>> =
+        par::par_map(&idx, |_, &i| recompute_row(&dist, &active, i));
 
     let mut n_active = n;
     while n_active > k {
-        // find the closest active pair
+        // closest active pair: O(n) scan over cached row minima; the
+        // strict `<` over ascending i keeps the lowest (i, j) on ties.
         let (mut bi, mut bj, mut bd) = (usize::MAX, usize::MAX, f64::INFINITY);
         for i in 0..n {
             if !active[i] {
                 continue;
             }
-            for j in i + 1..n {
-                if !active[j] {
-                    continue;
-                }
-                if dist[i][j] < bd {
-                    bd = dist[i][j];
+            if let Some((j, d)) = row_min[i] {
+                if d < bd {
+                    bd = d;
                     bi = i;
                     bj = j;
                 }
             }
         }
-        // merge bj into bi; UPGMA (average linkage) Lance–Williams:
+        // merge bj into bi (bi < bj by construction); UPGMA (average
+        // linkage) Lance–Williams:
         // d(i∪j, l) = (|i| d(i,l) + |j| d(j,l)) / (|i| + |j|)
         let (si, sj) = (members[bi].len() as f64, members[bj].len() as f64);
         for l in 0..n {
@@ -65,6 +98,28 @@ pub fn upgma(points: &[[f64; N_FEATURES]], k: usize) -> Vec<usize> {
         members[bi].extend(moved);
         active[bj] = false;
         n_active -= 1;
+
+        // Repair the nearest-neighbour cache.  Row bi changed wholesale;
+        // rows l < bj are stale only if their cached neighbour was bi or
+        // bj (full O(n) rescan) or if the merged cluster moved closer
+        // than their cached minimum (O(1) update).  Rows l > bj never
+        // reference bi or bj (they only look rightward) and are intact.
+        row_min[bi] = recompute_row(&dist, &active, bi);
+        for l in 0..bj {
+            if !active[l] || l == bi {
+                continue;
+            }
+            if let Some((j0, d0)) = row_min[l] {
+                if j0 == bj || j0 == bi {
+                    row_min[l] = recompute_row(&dist, &active, l);
+                } else if l < bi {
+                    let nd = dist[l][bi];
+                    if nd < d0 || (nd == d0 && bi < j0) {
+                        row_min[l] = Some((bi, nd));
+                    }
+                }
+            }
+        }
     }
 
     let mut labels = vec![0usize; n];
@@ -143,6 +198,83 @@ mod tests {
     fn empty_and_tiny_inputs() {
         assert!(upgma(&[], 3).is_empty());
         assert_eq!(upgma(&[[1.0; N_FEATURES]], 3), vec![0]);
+    }
+
+    /// The pre-cache algorithm: full O(n²) matrix rescan per merge.
+    /// Kept as the oracle for the row-min cache.
+    fn upgma_reference(points: &[[f64; N_FEATURES]], k: usize) -> Vec<usize> {
+        let n = points.len();
+        if n == 0 {
+            return vec![];
+        }
+        let k = k.min(n).max(1);
+        let mut members: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+        let mut active: Vec<bool> = vec![true; n];
+        let mut dist = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in i + 1..n {
+                let d = sqdist(&points[i], &points[j]).sqrt();
+                dist[i][j] = d;
+                dist[j][i] = d;
+            }
+        }
+        let mut n_active = n;
+        while n_active > k {
+            let (mut bi, mut bj, mut bd) = (usize::MAX, usize::MAX, f64::INFINITY);
+            for i in 0..n {
+                if !active[i] {
+                    continue;
+                }
+                for j in i + 1..n {
+                    if active[j] && dist[i][j] < bd {
+                        bd = dist[i][j];
+                        bi = i;
+                        bj = j;
+                    }
+                }
+            }
+            let (si, sj) = (members[bi].len() as f64, members[bj].len() as f64);
+            for l in 0..n {
+                if !active[l] || l == bi || l == bj {
+                    continue;
+                }
+                let d = (si * dist[bi][l] + sj * dist[bj][l]) / (si + sj);
+                dist[bi][l] = d;
+                dist[l][bi] = d;
+            }
+            let moved = std::mem::take(&mut members[bj]);
+            members[bi].extend(moved);
+            active[bj] = false;
+            n_active -= 1;
+        }
+        let mut labels = vec![0usize; n];
+        let mut next = 0usize;
+        for i in 0..n {
+            if active[i] {
+                for &m in &members[i] {
+                    labels[m] = next;
+                }
+                next += 1;
+            }
+        }
+        labels
+    }
+
+    #[test]
+    fn row_min_cache_matches_full_rescan_oracle() {
+        for seed in [10u64, 11, 12] {
+            let mut rng = Rng::new(seed);
+            let mut pts = blob(&mut rng, [0.0; N_FEATURES], 13);
+            pts.extend(blob(&mut rng, [2.0; N_FEATURES], 9));
+            pts.extend(blob(&mut rng, [5.0; N_FEATURES], 11));
+            for k in [1, 2, 3, 5, 8] {
+                assert_eq!(
+                    upgma(&pts, k),
+                    upgma_reference(&pts, k),
+                    "seed={seed} k={k}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! suite.
 
 use crate::offline::features::{sqdist, N_FEATURES};
+use crate::util::par;
 use crate::util::rng::Rng;
 
 /// Result of one clustering run.
@@ -19,14 +20,70 @@ pub struct Clustering {
 }
 
 /// One Lloyd step implemented by a backend (native or PJRT).
-pub trait KmeansBackend {
+pub trait KmeansBackend: Sync {
     /// Returns (new centroids, assignment, inertia).  Empty clusters
-    /// keep their previous centroid.
+    /// are reseeded from the points farthest from their assigned
+    /// centroids (see [`reseed_empty_clusters`]) instead of keeping a
+    /// stale centroid.
     fn step(
         &self,
         points: &[[f64; N_FEATURES]],
         centroids: &[[f64; N_FEATURES]],
     ) -> (Vec<[f64; N_FEATURES]>, Vec<usize>, f64);
+}
+
+/// Reseed empty clusters from the points farthest from their assigned
+/// centroids: the e-th empty cluster takes the (e+1)-th farthest point
+/// (ties break to the lowest point index) — a deterministic variant of
+/// the classic "split the worst-fit point" repair.  Keeping the stale
+/// centroid instead (the previous behaviour) left dead clusters
+/// stranded forever on small-n fixtures.  Shared by the native and
+/// PJRT backends so their steps stay in parity.
+///
+/// `d2[i]` is the squared distance of point `i` to its assigned (old)
+/// centroid; `counts[ci]` the number of points assigned to cluster `ci`.
+pub fn reseed_empty_clusters(
+    points: &[[f64; N_FEATURES]],
+    d2: &[f64],
+    counts: &[usize],
+    centroids: &mut [[f64; N_FEATURES]],
+) {
+    let empties: Vec<usize> = counts
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| c == 0)
+        .map(|(ci, _)| ci)
+        .collect();
+    if empties.is_empty() || points.is_empty() {
+        return;
+    }
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| {
+        d2[b]
+            .partial_cmp(&d2[a])
+            .expect("finite distances")
+            .then(a.cmp(&b))
+    });
+    for (e, &ci) in empties.iter().enumerate() {
+        if e < order.len() {
+            centroids[ci] = points[order[e]];
+        }
+    }
+}
+
+/// Fixed chunk size for the parallel assignment scan.  Boundaries
+/// depend only on this constant — never on the thread count — so the
+/// per-chunk partials reduce in identical floating-point order for any
+/// `PALLAS_THREADS` setting (including 1).
+const STEP_CHUNK: usize = 512;
+
+/// Per-chunk partial of one Lloyd step.
+struct StepPartial {
+    assignment: Vec<usize>,
+    d2: Vec<f64>,
+    inertia: f64,
+    sums: Vec<[f64; N_FEATURES]>,
+    counts: Vec<usize>,
 }
 
 /// Plain-Rust backend.
@@ -39,26 +96,52 @@ impl KmeansBackend for NativeKmeans {
         centroids: &[[f64; N_FEATURES]],
     ) -> (Vec<[f64; N_FEATURES]>, Vec<usize>, f64) {
         let k = centroids.len();
-        let mut assignment = vec![0usize; points.len()];
+        let windows: Vec<&[[f64; N_FEATURES]]> = points.chunks(STEP_CHUNK).collect();
+        let partials = par::par_map(&windows, |_, w| {
+            let mut part = StepPartial {
+                assignment: Vec::with_capacity(w.len()),
+                d2: Vec::with_capacity(w.len()),
+                inertia: 0.0,
+                sums: vec![[0.0; N_FEATURES]; k],
+                counts: vec![0usize; k],
+            };
+            for p in w.iter() {
+                let mut best = (0usize, f64::INFINITY);
+                for (ci, c) in centroids.iter().enumerate() {
+                    let d = sqdist(p, c);
+                    if d < best.1 {
+                        best = (ci, d);
+                    }
+                }
+                part.assignment.push(best.0);
+                part.d2.push(best.1);
+                part.inertia += best.1;
+                part.counts[best.0] += 1;
+                for f in 0..N_FEATURES {
+                    part.sums[best.0][f] += p[f];
+                }
+            }
+            part
+        });
+        // In-order reduction: chunk order is fixed, so the summation
+        // order (and hence every bit of the result) is thread-invariant.
+        let mut assignment = Vec::with_capacity(points.len());
+        let mut d2 = Vec::with_capacity(points.len());
         let mut inertia = 0.0;
         let mut sums = vec![[0.0; N_FEATURES]; k];
         let mut counts = vec![0usize; k];
-        for (pi, p) in points.iter().enumerate() {
-            let mut best = (0usize, f64::INFINITY);
-            for (ci, c) in centroids.iter().enumerate() {
-                let d = sqdist(p, c);
-                if d < best.1 {
-                    best = (ci, d);
+        for part in partials {
+            assignment.extend(part.assignment);
+            d2.extend(part.d2);
+            inertia += part.inertia;
+            for ci in 0..k {
+                counts[ci] += part.counts[ci];
+                for f in 0..N_FEATURES {
+                    sums[ci][f] += part.sums[ci][f];
                 }
             }
-            assignment[pi] = best.0;
-            inertia += best.1;
-            counts[best.0] += 1;
-            for f in 0..N_FEATURES {
-                sums[best.0][f] += p[f];
-            }
         }
-        let new_centroids: Vec<[f64; N_FEATURES]> = (0..k)
+        let mut new_centroids: Vec<[f64; N_FEATURES]> = (0..k)
             .map(|ci| {
                 if counts[ci] == 0 {
                     centroids[ci]
@@ -71,6 +154,7 @@ impl KmeansBackend for NativeKmeans {
                 }
             })
             .collect();
+        reseed_empty_clusters(points, &d2, &counts, &mut new_centroids);
         (new_centroids, assignment, inertia)
     }
 }
@@ -238,11 +322,52 @@ mod tests {
     }
 
     #[test]
-    fn empty_cluster_keeps_centroid() {
-        let pts = vec![[0.0; N_FEATURES]; 10];
+    fn empty_cluster_reseeds_from_farthest_point() {
+        // Nine points at the origin plus one outlier: the far centroid
+        // attracts nothing and must be reseeded onto the outlier, not
+        // left stranded at its stale position.
+        let mut pts = vec![[0.0; N_FEATURES]; 10];
+        pts[7] = [3.0; N_FEATURES];
         let centroids = vec![[0.0; N_FEATURES], [100.0; N_FEATURES]];
         let (c, a, _) = NativeKmeans.step(&pts, &centroids);
         assert!(a.iter().all(|&x| x == 0));
-        assert_eq!(c[1], [100.0; N_FEATURES]);
+        assert_eq!(c[1], [3.0; N_FEATURES], "reseed onto the farthest point");
+        assert_eq!(c[0], [0.3; N_FEATURES], "mean of the assigned points");
+    }
+
+    #[test]
+    fn multiple_empty_clusters_take_successive_farthest_points() {
+        let mut pts = vec![[0.0; N_FEATURES]; 8];
+        pts[2] = [5.0; N_FEATURES];
+        pts[5] = [4.0; N_FEATURES];
+        let centroids = vec![
+            [0.0; N_FEATURES],
+            [100.0; N_FEATURES],
+            [200.0; N_FEATURES],
+        ];
+        let (c, _, _) = NativeKmeans.step(&pts, &centroids);
+        assert_eq!(c[1], [5.0; N_FEATURES]);
+        assert_eq!(c[2], [4.0; N_FEATURES]);
+    }
+
+    #[test]
+    fn reseed_recovers_dead_cluster_within_a_full_run() {
+        // Small-n fixture that used to strand a dead cluster: two tight
+        // groups plus one outlier, k = 3.  With reseeding, the outlier
+        // ends up owning its own cluster and inertia drops accordingly.
+        let mut pts = vec![[0.0; N_FEATURES]; 6];
+        for p in pts.iter_mut().take(3) {
+            p[0] = 1.0;
+        }
+        pts[5] = [50.0; N_FEATURES];
+        let mut rng = Rng::new(11);
+        let res = kmeans(&pts, 3, &mut rng, &NativeKmeans);
+        let outlier_label = res.assignment[5];
+        assert!(
+            res.assignment[..5].iter().all(|&l| l != outlier_label),
+            "outlier should own a cluster: {:?}",
+            res.assignment
+        );
+        assert!(res.inertia < 2.0, "inertia={}", res.inertia);
     }
 }

@@ -17,8 +17,11 @@
 //! the online phase queries.  The numerically heavy fit+refine step goes
 //! through the [`surface::SurfaceBackend`] trait: [`spline`] provides
 //! the native implementation, `runtime::accel` the PJRT-accelerated one
-//! running the AOT-compiled JAX/Pallas artifacts.
+//! running the AOT-compiled JAX/Pallas artifacts.  Heavy stages fan
+//! out over the deterministic pool in `util::par`; [`cache`] memoizes
+//! converged tuning decisions across transfers.
 
+pub mod cache;
 pub mod chindex;
 pub mod clustering;
 pub mod confidence;
@@ -32,6 +35,7 @@ pub mod regression;
 pub mod spline;
 pub mod surface;
 
+pub use cache::{CacheStats, CachedTuning, Fingerprint, TuningCache};
 pub use pipeline::{KnowledgeBase, OfflineConfig, SurfaceSet};
 pub use spline::{BicubicSurface, Spline1D};
 pub use surface::ThroughputSurface;

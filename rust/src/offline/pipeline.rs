@@ -24,6 +24,7 @@ use crate::offline::surface::{
     NativeSurfaceBackend, SurfaceBackend, SurfaceGrid, ThroughputSurface,
 };
 use crate::util::json::Value;
+use crate::util::par;
 use crate::Params;
 use std::collections::BTreeMap;
 
@@ -308,28 +309,38 @@ impl KnowledgeBase {
         assert!(!entries.is_empty(), "offline analysis needs logs");
         let refs: Vec<&LogEntry> = entries.iter().collect();
         let clustering = cluster_logs(&refs, cfg.k_max, cfg.seed, kmeans_backend);
-        let mut sets = Vec::new();
-        for c in 0..clustering.k {
-            for class in crate::sim::dataset::FileSizeClass::all() {
-                let members: Vec<&LogEntry> = entries
-                    .iter()
-                    .zip(&clustering.labels)
-                    .filter(|(e, &l)| {
-                        l == c
-                            && crate::sim::dataset::FileSizeClass::classify(e.avg_file_mb)
-                                == class
-                    })
-                    .map(|(e, _)| e)
-                    .collect();
-                if members.len() < cfg.min_slice_obs {
-                    continue;
-                }
-                let set = build_cluster_set(c, class, &members, &cfg, surface_backend);
-                if !set.buckets.is_empty() {
-                    sets.push(set);
-                }
+        // Every (cluster, file-size class) cell is an independent fit:
+        // fan the cells out over the pool and keep the survivors in
+        // cell order (identical to the sequential double loop).
+        let work: Vec<(usize, crate::sim::dataset::FileSizeClass)> = (0..clustering.k)
+            .flat_map(|c| {
+                crate::sim::dataset::FileSizeClass::all()
+                    .into_iter()
+                    .map(move |class| (c, class))
+            })
+            .collect();
+        let built = par::par_map(&work, |_, &(c, class)| {
+            let members: Vec<&LogEntry> = entries
+                .iter()
+                .zip(&clustering.labels)
+                .filter(|(e, &l)| {
+                    l == c
+                        && crate::sim::dataset::FileSizeClass::classify(e.avg_file_mb)
+                            == class
+                })
+                .map(|(e, _)| e)
+                .collect();
+            if members.len() < cfg.min_slice_obs {
+                return None;
             }
-        }
+            let set = build_cluster_set(c, class, &members, &cfg, surface_backend);
+            if set.buckets.is_empty() {
+                None
+            } else {
+                Some(set)
+            }
+        });
+        let sets: Vec<SurfaceSet> = built.into_iter().flatten().collect();
         KnowledgeBase {
             cfg,
             clustering,
@@ -388,36 +399,50 @@ impl KnowledgeBase {
         }
         self.entries.extend(new_entries);
 
-        for c in touched {
-            for class in crate::sim::dataset::FileSizeClass::all() {
-                let members: Vec<&LogEntry> = self
-                    .entries
-                    .iter()
-                    .zip(&self.clustering.labels)
-                    .filter(|(e, &l)| {
-                        l == c
-                            && crate::sim::dataset::FileSizeClass::classify(e.avg_file_mb)
-                                == class
-                    })
-                    .map(|(e, _)| e)
-                    .collect();
-                if members.len() < self.cfg.min_slice_obs {
-                    continue;
-                }
-                let rebuilt =
-                    build_cluster_set(c, class, &members, &self.cfg, surface_backend);
-                if rebuilt.buckets.is_empty() {
-                    continue;
-                }
-                if let Some(slot) = self
-                    .sets
-                    .iter_mut()
-                    .find(|s| s.cluster == c && s.class == class)
-                {
-                    *slot = rebuilt;
-                } else {
-                    self.sets.push(rebuilt);
-                }
+        // Touched (cluster, class) cells are refit in parallel, then
+        // spliced back in serially (cell order) so set ordering stays
+        // deterministic.
+        let work: Vec<(usize, crate::sim::dataset::FileSizeClass)> = touched
+            .iter()
+            .flat_map(|&c| {
+                crate::sim::dataset::FileSizeClass::all()
+                    .into_iter()
+                    .map(move |class| (c, class))
+            })
+            .collect();
+        let entries = &self.entries;
+        let clustering = &self.clustering;
+        let cfg = &self.cfg;
+        let rebuilt_cells = par::par_map(&work, |_, &(c, class)| {
+            let members: Vec<&LogEntry> = entries
+                .iter()
+                .zip(&clustering.labels)
+                .filter(|(e, &l)| {
+                    l == c
+                        && crate::sim::dataset::FileSizeClass::classify(e.avg_file_mb)
+                            == class
+                })
+                .map(|(e, _)| e)
+                .collect();
+            if members.len() < cfg.min_slice_obs {
+                return None;
+            }
+            let rebuilt = build_cluster_set(c, class, &members, cfg, surface_backend);
+            if rebuilt.buckets.is_empty() {
+                None
+            } else {
+                Some(rebuilt)
+            }
+        });
+        for rebuilt in rebuilt_cells.into_iter().flatten() {
+            if let Some(slot) = self
+                .sets
+                .iter_mut()
+                .find(|s| s.cluster == rebuilt.cluster && s.class == rebuilt.class)
+            {
+                *slot = rebuilt;
+            } else {
+                self.sets.push(rebuilt);
             }
         }
     }
@@ -432,6 +457,87 @@ impl KnowledgeBase {
             .iter()
             .map(|s| s.buckets.iter().map(|b| b.slices.len()).sum::<usize>())
             .sum()
+    }
+
+    /// Order-sensitive FNV-1a digest over every numeric output of the
+    /// pipeline: labels, centroids, CH score, per-slice surface
+    /// coefficients, optima, confidence bands and sampling points.
+    /// Equal digests mean bit-identical knowledge bases; the
+    /// `prop_parallel` suite holds this invariant across
+    /// `PALLAS_THREADS` settings.
+    pub fn digest(&self) -> u64 {
+        struct Fnv(u64);
+        impl Fnv {
+            fn u(&mut self, x: u64) {
+                for byte in x.to_le_bytes() {
+                    self.0 ^= byte as u64;
+                    self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+                }
+            }
+            fn f(&mut self, v: f64) {
+                self.u(v.to_bits());
+            }
+            fn params(&mut self, q: Params) {
+                self.u(q.cc as u64);
+                self.u(q.p as u64);
+                self.u(q.pp as u64);
+            }
+        }
+        let mut h = Fnv(0xCBF2_9CE4_8422_2325);
+        h.u(self.clustering.k as u64);
+        h.u(match self.clustering.algo {
+            crate::offline::clustering::ClusterAlgo::KmeansPP => 0,
+            crate::offline::clustering::ClusterAlgo::HacUpgma => 1,
+        });
+        h.f(self.clustering.ch_score);
+        for &l in &self.clustering.labels {
+            h.u(l as u64);
+        }
+        for c in &self.clustering.centroids {
+            for &v in c {
+                h.f(v);
+            }
+        }
+        for set in &self.sets {
+            h.u(set.cluster as u64);
+            for byte in set.class.name().bytes() {
+                h.u(byte as u64);
+            }
+            for sp in &set.sampling {
+                h.params(sp.params);
+                h.f(sp.separation);
+                h.u(sp.from_maxima as u64);
+            }
+            for b in &set.buckets {
+                h.u(b.bucket as u64);
+                h.f(b.load_intensity);
+                h.f(b.true_intensity);
+                h.params(b.optimal_params);
+                h.f(b.optimal_th);
+                for s in &b.slices {
+                    h.u(s.pp as u64);
+                    h.u(s.n_obs as u64);
+                    h.f(s.coverage);
+                    h.params(s.optimal_params);
+                    h.f(s.optimal_th);
+                    h.f(s.confidence.sigma);
+                    h.f(s.confidence.z);
+                    h.f(s.fitted.max_th);
+                    h.f(s.fitted.max_at.0);
+                    h.f(s.fitted.max_at.1);
+                    h.f(s.fitted.grid_mean);
+                    h.f(s.fitted.grid_std);
+                    for row in &s.fitted.surface.coeffs {
+                        for patch in row {
+                            for &c in patch {
+                                h.f(c);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        h.0
     }
 
     /// Compact JSON summary (CLI `offline --out`).

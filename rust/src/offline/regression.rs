@@ -93,8 +93,11 @@ impl PolySurface {
             .into_iter()
             .filter(|&v| v <= cap)
             .collect();
-        let mut best = (Params::DEFAULT, f64::NEG_INFINITY);
-        for &cc in &vals {
+        // One pool unit per cc plane; the serial in-order reduction
+        // over per-plane partial bests replicates the sequential
+        // strict-`>` scan exactly (first maximum wins on ties).
+        let partials = crate::util::par::par_map(&vals, |_, &cc| {
+            let mut best = (Params::DEFAULT, f64::NEG_INFINITY);
             for &p in &vals {
                 for &pp in &vals {
                     let q = Params::new(cc, p, pp);
@@ -103,6 +106,13 @@ impl PolySurface {
                         best = (q, v);
                     }
                 }
+            }
+            best
+        });
+        let mut best = (Params::DEFAULT, f64::NEG_INFINITY);
+        for part in partials {
+            if part.1 > best.1 {
+                best = part;
             }
         }
         best

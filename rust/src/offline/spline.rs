@@ -5,6 +5,7 @@
 //! artifacts in `rust/tests/integration_runtime.rs`.
 
 use crate::util::linalg::thomas;
+use crate::util::par;
 
 /// 1-D natural cubic spline through (xs, ys).
 #[derive(Debug, Clone, PartialEq)]
@@ -105,12 +106,10 @@ impl BicubicSurface {
         assert_eq!(values.len(), gp);
         assert!(values.iter().all(|r| r.len() == gc), "ragged value grid");
 
-        // 1) spline along cc for every row: row_coeffs[i][j][b]
-        let mut row_coeffs = vec![vec![[0.0; 4]; gc - 1]; gp];
-        for i in 0..gp {
-            let s = Spline1D::fit(ys, &values[i]);
-            row_coeffs[i] = s.coeffs;
-        }
+        // 1) spline along cc for every row (rows are independent;
+        //    fanned out over the pool): row_coeffs[i][j][b]
+        let row_coeffs: Vec<Vec<[f64; 4]>> =
+            par::par_map(values, |_, row| Spline1D::fit(ys, row).coeffs);
         // 2) spline along p of each row coefficient: for every (j, b)
         let mut coeffs = vec![vec![[0.0f64; 16]; gc - 1]; gp - 1];
         let mut samples = vec![0.0; gp];
@@ -217,9 +216,14 @@ impl BicubicSurface {
     pub fn dense_eval(&self, rf: usize) -> Vec<Vec<f64>> {
         let gp1 = self.coeffs.len();
         let gc1 = self.coeffs[0].len();
-        let mut out = vec![vec![0.0; gc1 * rf]; gp1 * rf];
-        for i in 0..gp1 {
-            for qi in 0..rf {
+        // Each patch row yields rf output rows independently of the
+        // others; fan the rows out and flatten in patch order (every
+        // cell is computed in isolation, so the result is trivially
+        // thread-invariant).
+        let patch_rows: Vec<usize> = (0..gp1).collect();
+        let blocks = par::par_map(&patch_rows, |_, &i| {
+            let mut rows = vec![vec![0.0; gc1 * rf]; rf];
+            for (qi, out_row) in rows.iter_mut().enumerate() {
                 let u = qi as f64 / rf as f64;
                 let upow = [1.0, u, u * u, u * u * u];
                 for j in 0..gc1 {
@@ -233,10 +237,15 @@ impl BicubicSurface {
                                 acc += c[4 * a + b] * upow[a] * vpow[b];
                             }
                         }
-                        out[i * rf + qi][j * rf + qj] = acc;
+                        out_row[j * rf + qj] = acc;
                     }
                 }
             }
+            rows
+        });
+        let mut out = Vec::with_capacity(gp1 * rf);
+        for b in blocks {
+            out.extend(b);
         }
         out
     }

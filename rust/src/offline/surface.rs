@@ -131,7 +131,9 @@ pub struct FittedSurface {
 /// Backend for the batched fit + dense-refine + stats step.  The native
 /// implementation lives here; `runtime::accel::PjrtSurfaceBackend` runs
 /// the same computation through the AOT artifacts (parity-tested).
-pub trait SurfaceBackend {
+/// `Sync` is a supertrait so `&dyn SurfaceBackend` can be shared by the
+/// pool workers that fan the pipeline's per-cluster fits out.
+pub trait SurfaceBackend: Sync {
     /// All grids share (xs, ys).  `rf` is the dense refinement factor.
     fn fit_batch(
         &self,
@@ -157,42 +159,41 @@ impl SurfaceBackend for NativeSurfaceBackend {
         values: &[Vec<Vec<f64>>],
         rf: usize,
     ) -> Vec<FittedSurface> {
-        values
-            .iter()
-            .map(|grid| {
-                let surface = BicubicSurface::fit(xs, ys, grid);
-                let dense = surface.dense_eval(rf);
-                let mut max_v = f64::NEG_INFINITY;
-                let mut max_ij = (0usize, 0usize);
-                for (i, row) in dense.iter().enumerate() {
-                    for (j, &v) in row.iter().enumerate() {
-                        if v > max_v {
-                            max_v = v;
-                            max_ij = (i, j);
-                        }
+        // Each grid's fit is independent; fan out over the pool (the
+        // outputs are reassembled in input order).
+        crate::util::par::par_map(values, |_, grid| {
+            let surface = BicubicSurface::fit(xs, ys, grid);
+            let dense = surface.dense_eval(rf);
+            let mut max_v = f64::NEG_INFINITY;
+            let mut max_ij = (0usize, 0usize);
+            for (i, row) in dense.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    if v > max_v {
+                        max_v = v;
+                        max_ij = (i, j);
                     }
                 }
-                let mut max_at = surface.refined_to_coords(max_ij.0, max_ij.1, rf);
-                // fold in the raw knot grid (left-closed refinement never
-                // samples the far boundary)
-                for (i, row) in grid.iter().enumerate() {
-                    for (j, &v) in row.iter().enumerate() {
-                        if v > max_v {
-                            max_v = v;
-                            max_at = (xs[i], ys[j]);
-                        }
+            }
+            let mut max_at = surface.refined_to_coords(max_ij.0, max_ij.1, rf);
+            // fold in the raw knot grid (left-closed refinement never
+            // samples the far boundary)
+            for (i, row) in grid.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    if v > max_v {
+                        max_v = v;
+                        max_at = (xs[i], ys[j]);
                     }
                 }
-                let flat: Vec<f64> = grid.iter().flatten().copied().collect();
-                FittedSurface {
-                    surface,
-                    max_th: max_v,
-                    max_at,
-                    grid_mean: crate::util::stats::mean(&flat),
-                    grid_std: crate::util::stats::std_pop(&flat),
-                }
-            })
-            .collect()
+            }
+            let flat: Vec<f64> = grid.iter().flatten().copied().collect();
+            FittedSurface {
+                surface,
+                max_th: max_v,
+                max_at,
+                grid_mean: crate::util::stats::mean(&flat),
+                grid_std: crate::util::stats::std_pop(&flat),
+            }
+        })
     }
 
     fn name(&self) -> &'static str {

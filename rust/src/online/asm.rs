@@ -147,6 +147,23 @@ impl Asm {
         self.phase = AsmPhase::Sampling;
     }
 
+    /// Warm-start from a cached converged bucket (the historical
+    /// tuning cache's replay path): skip the bisection entirely and
+    /// stream at `bucket`'s optimum straight away.  Returns false with
+    /// the state untouched when the bucket index no longer exists —
+    /// e.g. the knowledge base was rebuilt with fewer buckets — in
+    /// which case the caller falls back to ordinary sampling.  The
+    /// deviation monitor still guards a stale warm start: a persistent
+    /// mismatch mid-stream triggers the usual [`Asm::reselect`].
+    pub fn warm_start(&mut self, bucket: usize) -> bool {
+        if bucket >= self.set.buckets.len() {
+            return false;
+        }
+        self.current = bucket;
+        self.phase = AsmPhase::Streaming;
+        true
+    }
+
     /// Re-select the bucket whose prediction is closest to a measured
     /// throughput (the "FindClosestSurface" of Algorithm 1, used after
     /// a persistent deviation mid-stream).
@@ -362,6 +379,21 @@ mod tests {
             asm.observe(1000.0);
         }
         assert_eq!(asm.current_bucket(), 0);
+    }
+
+    #[test]
+    fn warm_start_skips_sampling_and_validates_bucket() {
+        let mut asm = Asm::new(set_with_levels(&five_levels()));
+        assert!(asm.warm_start(3));
+        assert_eq!(asm.phase(), AsmPhase::Streaming);
+        assert_eq!(asm.current_bucket(), 3);
+        assert_eq!(asm.samples_used(), 0, "no sample transfers were spent");
+        // out-of-range bucket (stale cache): refused, state untouched
+        assert!(!asm.warm_start(99));
+        assert_eq!(asm.current_bucket(), 3);
+        // a stale warm start can still be corrected mid-stream
+        let d = asm.reselect(990.0);
+        assert_eq!(d.bucket, 0);
     }
 
     #[test]

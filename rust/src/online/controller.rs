@@ -8,6 +8,7 @@
 //! [`crate::sim::multiuser::UserPolicy`] and plugs directly into
 //! `SimEnv::run_transfer` closures and the coordinator's orchestrator.
 
+use crate::offline::cache::CachedTuning;
 use crate::offline::pipeline::SurfaceSet;
 use crate::online::asm::{Asm, AsmPhase};
 use crate::online::monitor::DeviationMonitor;
@@ -58,6 +59,24 @@ impl DynamicTuner {
 
     pub fn with_defaults(set: SurfaceSet) -> DynamicTuner {
         DynamicTuner::new(set, TunerConfig::default())
+    }
+
+    /// Construct warm-started from a historical tuning-cache entry:
+    /// the ASM begins in its streaming phase at the cached bucket,
+    /// spending zero sample transfers.  Falls back to cold sampling
+    /// when the entry no longer matches this surface set (bucket gone,
+    /// or the bucket's optimum moved since the entry was recorded) —
+    /// a stale replay would stream at the wrong operating point.
+    pub fn with_cached(
+        set: SurfaceSet,
+        cfg: TunerConfig,
+        cached: &CachedTuning,
+    ) -> DynamicTuner {
+        let mut tuner = DynamicTuner::new(set, cfg);
+        if tuner.asm.warm_start(cached.bucket) && tuner.asm.params() != cached.params {
+            tuner.asm.restart();
+        }
+        tuner
     }
 
     /// Parameters for the next chunk.
@@ -246,6 +265,52 @@ mod tests {
         t.observe(200.0);
         assert_eq!(t.phase(), AsmPhase::Streaming);
         assert_eq!(t.asm().current_bucket(), 2);
+    }
+
+    #[test]
+    fn cached_warm_start_streams_without_sampling() {
+        let cached = CachedTuning {
+            params: Params::new(8, 8, 8),
+            predicted_mbps: 200.0,
+            bucket: 2,
+        };
+        let t = DynamicTuner::with_cached(
+            set_with_levels(&[1000.0, 600.0, 200.0]),
+            TunerConfig::default(),
+            &cached,
+        );
+        assert_eq!(t.phase(), AsmPhase::Streaming);
+        assert_eq!(t.asm().current_bucket(), 2);
+        assert_eq!(t.samples_used(), 0);
+    }
+
+    #[test]
+    fn stale_cache_entry_falls_back_to_sampling() {
+        // bucket index out of range → cold start
+        let gone = CachedTuning {
+            params: Params::new(8, 8, 8),
+            predicted_mbps: 500.0,
+            bucket: 7,
+        };
+        let t = DynamicTuner::with_cached(
+            set_with_levels(&[1000.0, 600.0, 200.0]),
+            TunerConfig::default(),
+            &gone,
+        );
+        assert_eq!(t.phase(), AsmPhase::Sampling);
+        // bucket exists but its optimum moved since the entry was cut
+        let moved = CachedTuning {
+            params: Params::new(4, 4, 4),
+            predicted_mbps: 600.0,
+            bucket: 1,
+        };
+        let t = DynamicTuner::with_cached(
+            set_with_levels(&[1000.0, 600.0, 200.0]),
+            TunerConfig::default(),
+            &moved,
+        );
+        assert_eq!(t.phase(), AsmPhase::Sampling);
+        assert_eq!(t.asm().current_bucket(), 1, "restart() re-medians");
     }
 
     #[test]

@@ -203,8 +203,9 @@ impl KmeansBackend for PjrtKmeans {
         // centroid update + inertia natively (exact, unbiased by padding)
         let mut sums = vec![[0.0; N_FEATURES]; k];
         let mut counts = vec![0usize; k];
+        let mut d2s = vec![0.0f64; points.len()];
         let mut inertia = 0.0;
-        for (p, &a) in points.iter().zip(&assignment) {
+        for (pi, (p, &a)) in points.iter().zip(&assignment).enumerate() {
             let a = a.min(k - 1);
             counts[a] += 1;
             let mut d2 = 0.0;
@@ -213,9 +214,10 @@ impl KmeansBackend for PjrtKmeans {
                 let d = p[f] - centroids[a][f];
                 d2 += d * d;
             }
+            d2s[pi] = d2;
             inertia += d2;
         }
-        let new_centroids: Vec<[f64; N_FEATURES]> = (0..k)
+        let mut new_centroids: Vec<[f64; N_FEATURES]> = (0..k)
             .map(|ki| {
                 if counts[ki] == 0 {
                     centroids[ki]
@@ -228,6 +230,8 @@ impl KmeansBackend for PjrtKmeans {
                 }
             })
             .collect();
+        // same dead-cluster repair as the native backend (parity)
+        crate::offline::kmeans::reseed_empty_clusters(points, &d2s, &counts, &mut new_centroids);
         (new_centroids, assignment, inertia)
     }
 }

@@ -1,12 +1,14 @@
 //! In-tree infrastructure replacing crates that are unresolvable in this
 //! offline environment (see `DESIGN.md §4`): seeded RNG, JSON, CLI
 //! parsing, statistics, small-matrix linear algebra, a property-testing
-//! mini-framework and a wallclock bench harness.
+//! mini-framework, a wallclock bench harness, and a deterministic
+//! scoped thread pool ([`par`]).
 
 pub mod cli;
 pub mod err;
 pub mod json;
 pub mod linalg;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

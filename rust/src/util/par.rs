@@ -1,0 +1,218 @@
+//! Zero-dependency deterministic thread pool (scoped, work-stealing-lite).
+//!
+//! The offline-discovery pipeline fans out embarrassingly-parallel units
+//! (k-sweep restarts, HAC distance rows, per-cluster surface fits,
+//! experiment grid cells) over OS threads while keeping the output
+//! **bit-identical** to a serial run:
+//!
+//! * work units are indexed and their results are reassembled in index
+//!   order, so any floating-point reduction downstream sees the exact
+//!   same operand order regardless of thread count;
+//! * chunk boundaries are fixed by the caller (never derived from the
+//!   thread count), so per-chunk partial sums are identical whether one
+//!   thread or eight drained the queue;
+//! * the serial path (`threads == 1`) runs the very same closure over
+//!   the very same units — it is the degenerate pool, not special code.
+//!
+//! Scheduling is a shared atomic cursor: each worker claims the next
+//! unclaimed index, which is the "stealing-lite" half — no per-worker
+//! deques, but also no static striping, so a slow unit never stalls the
+//! rest of the queue.
+//!
+//! `PALLAS_THREADS` overrides the worker count (read at call time, so
+//! tests and benches can flip it per-section); nested `par_map` calls
+//! from inside a pool worker degrade to serial to avoid thread
+//! explosion when parallel layers compose (pipeline → surface fit →
+//! spline rows).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+thread_local! {
+    /// Set inside pool workers so nested `par_map` calls run serial.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a pool worker (nested call site).
+pub fn in_worker() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+/// Worker count: `PALLAS_THREADS` if set and >= 1, else the machine's
+/// available parallelism, else 1.
+pub fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("PALLAS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` with the default worker count, preserving
+/// order.  `f` receives `(index, &item)`.  Bit-identical to serial for
+/// any thread count.
+pub fn par_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    par_map_with(max_threads(), items, f)
+}
+
+/// Map with an explicit worker count.  Runs serial when `threads <= 1`,
+/// when there are fewer than two items, or when called from inside a
+/// pool worker (nested parallelism guard).
+pub fn par_map_with<T, U, F>(threads: usize, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n < 2 || in_worker() {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let workers = threads.min(n);
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, U)>();
+    let mut slots: Vec<Option<U>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let f = &f;
+            s.spawn(move || {
+                IN_POOL_WORKER.with(|flag| flag.set(true));
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // A dropped receiver is impossible while the scope
+                    // lives; unwrap keeps worker panics loud.
+                    tx.send((i, f(i, &items[i]))).unwrap();
+                }
+            });
+        }
+        drop(tx);
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|v| v.expect("pool worker dropped a unit"))
+        .collect()
+}
+
+/// Chunked map: splits `items` into fixed `chunk`-sized windows, maps
+/// each window to a `Vec<U>`, and flattens in window order.  Because
+/// the chunk boundaries depend only on `chunk` (not the thread count),
+/// per-chunk floating-point partials are reproducible bit-for-bit.
+/// `f` receives `(chunk_start_index, window)`.
+pub fn par_chunk_map<T, U, F>(items: &[T], chunk: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &[T]) -> Vec<U> + Sync,
+{
+    let chunk = chunk.max(1);
+    let windows: Vec<(usize, &[T])> = items
+        .chunks(chunk)
+        .enumerate()
+        .map(|(ci, w)| (ci * chunk, w))
+        .collect();
+    let parts = par_map(&windows, |_, &(start, w)| f(start, w));
+    let mut out = Vec::with_capacity(items.len());
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes tests that mutate `PALLAS_THREADS` (process-global).
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn par_map_matches_serial_any_thread_count() {
+        let items: Vec<f64> = (0..257).map(|i| (i as f64).sin()).collect();
+        let serial = par_map_with(1, &items, |i, x| x * (i as f64 + 0.5));
+        for threads in [2, 3, 8] {
+            let par = par_map_with(threads, &items, |i, x| x * (i as f64 + 0.5));
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map_with(4, &items, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_chunk_map_fixed_boundaries() {
+        let items: Vec<f64> = (0..1000).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        // Per-chunk serial partial sums, flattened in chunk order.
+        let sums = |_: usize, w: &[f64]| vec![w.iter().sum::<f64>()];
+        let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let serial = par_chunk_map(&items, 64, sums);
+        std::env::set_var("PALLAS_THREADS", "7");
+        let par = par_chunk_map(&items, 64, sums);
+        std::env::remove_var("PALLAS_THREADS");
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn nested_par_map_degrades_to_serial() {
+        let outer: Vec<usize> = (0..8).collect();
+        let out = par_map_with(4, &outer, |_, &x| {
+            // Inside a worker the nested call must run serial.
+            let inner: Vec<usize> = (0..4).collect();
+            let nested = par_map_with(4, &inner, |_, &y| {
+                assert!(in_worker());
+                y + x
+            });
+            nested.iter().sum::<usize>()
+        });
+        assert_eq!(out[0], 6); // 0+1+2+3, x = 0
+        assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn empty_and_single_item_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map_with(8, &empty, |_, &x| x).is_empty());
+        let one = [42u32];
+        assert_eq!(par_map_with(8, &one, |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn max_threads_respects_env_override() {
+        let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::env::set_var("PALLAS_THREADS", "3");
+        assert_eq!(max_threads(), 3);
+        std::env::set_var("PALLAS_THREADS", "0");
+        assert_eq!(max_threads(), 1); // clamped to >= 1
+        std::env::remove_var("PALLAS_THREADS");
+        assert!(max_threads() >= 1);
+    }
+}

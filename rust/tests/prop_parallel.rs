@@ -1,0 +1,53 @@
+//! Property: the parallel offline pipeline is bit-identical to serial.
+//!
+//! The test mutates `PALLAS_THREADS`, a process-global, so everything
+//! lives in one `#[test]` — cargo gives each integration-test binary
+//! its own process, and a single test function means no sibling thread
+//! can race the env var.
+
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::sim::profile::NetProfile;
+use twophase::util::par;
+
+#[test]
+fn pipeline_output_is_bit_identical_across_thread_counts() {
+    // full offline discovery: clustering + surface fits, digested over
+    // every label, centroid, coefficient and optimum (order-sensitive)
+    for seed in [11u64, 42, 0xB16_DA7A] {
+        let logs = generate_history(
+            &NetProfile::xsede(),
+            &GeneratorConfig {
+                days: 3.0,
+                transfers_per_hour: 6.0,
+                seed,
+            },
+        );
+        let mut digests = Vec::new();
+        for threads in ["1", "2", "8"] {
+            std::env::set_var("PALLAS_THREADS", threads);
+            assert_eq!(par::max_threads(), threads.parse::<usize>().unwrap());
+            let kb = KnowledgeBase::build_native(logs.clone(), OfflineConfig::default());
+            digests.push((threads, kb.digest()));
+        }
+        let (_, serial_digest) = digests[0];
+        for &(threads, digest) in &digests[1..] {
+            assert_eq!(
+                digest, serial_digest,
+                "seed {seed}: {threads}-thread build diverged from serial"
+            );
+        }
+    }
+
+    // the pool primitive itself: results keyed by index, so the f64
+    // bit patterns cannot depend on scheduling
+    let xs: Vec<f64> = (0..1_000).map(|i| (i as f64).sin() * 1e6).collect();
+    std::env::set_var("PALLAS_THREADS", "1");
+    let serial: Vec<u64> = par::par_map(&xs, |i, &x| (x * (i as f64 + 0.5)).to_bits());
+    for threads in ["2", "8"] {
+        std::env::set_var("PALLAS_THREADS", threads);
+        let par: Vec<u64> = par::par_map(&xs, |i, &x| (x * (i as f64 + 0.5)).to_bits());
+        assert_eq!(par, serial, "{threads}-thread par_map diverged");
+    }
+    std::env::remove_var("PALLAS_THREADS");
+}

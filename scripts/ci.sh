@@ -12,3 +12,15 @@ fi
 cargo build --release
 cargo test -q
 cargo clippy -- -D warnings
+
+# second tier-1 pass under a fixed 2-worker pool: the deterministic
+# thread pool must be bit-identical to serial, so nothing may change
+PALLAS_THREADS=2 cargo test -q
+
+# bench smoke: tiny grid through the parallelism bench, then make sure
+# the emitted JSON actually parses
+TWOPHASE_DAYS=2 TWOPHASE_REPS=1 PALLAS_THREADS=2 cargo bench --bench exp_parallel
+if command -v python3 >/dev/null 2>&1; then
+    python3 -c "import json; json.load(open('BENCH_parallel.json'))"
+    echo "BENCH_parallel.json parses"
+fi
