@@ -80,7 +80,8 @@ fn main() {
         Arc::new(StaticAnnModel::train(&logs, 32, 0xE1)),
         Arc::new(AnnOtModel::train(&logs, 32, 0xE2)),
         OrchestratorConfig::default(),
-    );
+    )
+    .expect("generated logs yield a non-empty knowledge base");
 
     let workloads = [
         ("xsede", Dataset::new(20_000, 1.0)),   // 20 GB of small files

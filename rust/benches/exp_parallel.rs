@@ -77,7 +77,8 @@ fn main() {
             cache_capacity: 16,
             ..OrchestratorConfig::default()
         },
-    );
+    )
+    .expect("bench corpus yields a non-empty knowledge base");
     let mut warm_samples = 0usize;
     for round in 0..2usize {
         for rep in 0..reps {

@@ -1,0 +1,200 @@
+//! Baseline ratchet for `pallas-lint`.
+//!
+//! The baseline file (`rust/lint-baseline.txt`) records pre-existing
+//! violations as `rule path count` lines.  CI compares a fresh scan
+//! against it and fails in **both** directions:
+//!
+//! * a (rule, path) pair whose live count exceeds its allowance is a
+//!   **new violation** — fix or suppress it;
+//! * a pair whose live count dropped below its allowance is a **stale
+//!   entry** — shrink or delete the baseline line, so the debt only
+//!   ever ratchets down.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::Violation;
+use crate::bail;
+use crate::util::err::{Context, Result};
+
+/// Allowed violation counts keyed by `(rule, path)`.
+#[derive(Debug, Default, Clone)]
+pub struct Baseline {
+    pub allowed: BTreeMap<(String, String), usize>,
+}
+
+/// Parse the `rule path count` baseline format.  Blank lines and `#`
+/// comments are skipped; duplicate keys are rejected.
+pub fn parse(text: &str) -> Result<Baseline> {
+    let mut allowed: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(rule), Some(path), Some(count)) =
+            (parts.next(), parts.next(), parts.next())
+        else {
+            bail!("baseline line {}: expected `rule path count`", idx + 1);
+        };
+        if parts.next().is_some() {
+            bail!("baseline line {}: trailing fields", idx + 1);
+        }
+        let count: usize = count
+            .parse()
+            .ok()
+            .with_context(|| format!("baseline line {}: bad count `{count}`", idx + 1))?;
+        if count == 0 {
+            bail!("baseline line {}: zero-count entry is stale by definition", idx + 1);
+        }
+        let key = (rule.to_string(), path.to_string());
+        if allowed.insert(key, count).is_some() {
+            bail!("baseline line {}: duplicate entry for {rule} {path}", idx + 1);
+        }
+    }
+    Ok(Baseline { allowed })
+}
+
+/// Live violation counts keyed by `(rule, path)`.
+pub fn counts(violations: &[Violation]) -> BTreeMap<(String, String), usize> {
+    let mut out: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for v in violations {
+        *out.entry((v.rule.to_string(), v.path.clone())).or_insert(0) += 1;
+    }
+    out
+}
+
+/// A (rule, path) pair whose live count disagrees with the baseline.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub rule: String,
+    pub path: String,
+    pub allowed: usize,
+    pub actual: usize,
+}
+
+/// Result of comparing a scan against the baseline.
+#[derive(Debug, Default)]
+pub struct Comparison {
+    /// Pairs over their allowance, with the file's individual
+    /// violations attached for reporting.
+    pub over: Vec<(Delta, Vec<Violation>)>,
+    /// Baseline entries whose debt was (partly) paid off.
+    pub stale: Vec<Delta>,
+}
+
+impl Comparison {
+    pub fn clean(&self) -> bool {
+        self.over.is_empty() && self.stale.is_empty()
+    }
+}
+
+/// Compare live violations against the baseline allowances.
+pub fn compare(base: &Baseline, violations: &[Violation]) -> Comparison {
+    let live = counts(violations);
+    let mut cmp = Comparison::default();
+    for (key, &actual) in &live {
+        let allowed = base.allowed.get(key).copied().unwrap_or(0);
+        if actual > allowed {
+            let detail: Vec<Violation> = violations
+                .iter()
+                .filter(|v| v.rule == key.0 && v.path == key.1)
+                .cloned()
+                .collect();
+            cmp.over.push((
+                Delta {
+                    rule: key.0.clone(),
+                    path: key.1.clone(),
+                    allowed,
+                    actual,
+                },
+                detail,
+            ));
+        }
+    }
+    for (key, &allowed) in &base.allowed {
+        let actual = live.get(key).copied().unwrap_or(0);
+        if actual < allowed {
+            cmp.stale.push(Delta {
+                rule: key.0.clone(),
+                path: key.1.clone(),
+                allowed,
+                actual,
+            });
+        }
+    }
+    cmp
+}
+
+/// Render violations as a fresh baseline file, sorted by (path, rule).
+pub fn render(violations: &[Violation]) -> String {
+    let live = counts(violations);
+    let mut lines: Vec<String> = vec![
+        "# pallas-lint baseline: pre-existing violations, ratcheted down only.".to_string(),
+        "# Format: rule-id path count.  CI fails on counts above AND below".to_string(),
+        "# these allowances (stale entries must be removed when debt is paid).".to_string(),
+    ];
+    let mut entries: Vec<(&(String, String), &usize)> = live.iter().collect();
+    entries.sort_by(|a, b| (&a.0 .1, &a.0 .0).cmp(&(&b.0 .1, &b.0 .0)));
+    for ((rule, path), count) in entries {
+        lines.push(format!("{rule} {path} {count}"));
+    }
+    lines.push(String::new());
+    lines.join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(rule: &'static str, path: &str, line: usize) -> Violation {
+        Violation {
+            rule,
+            path: path.to_string(),
+            line,
+            snippet: String::new(),
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_render() {
+        let vs = vec![
+            v("panic-in-lib", "src/a.rs", 3),
+            v("panic-in-lib", "src/a.rs", 9),
+            v("nondet-iteration", "src/b.rs", 1),
+        ];
+        let text = render(&vs);
+        let base = parse(&text).expect("rendered baseline parses");
+        assert_eq!(
+            base.allowed
+                .get(&("panic-in-lib".to_string(), "src/a.rs".to_string())),
+            Some(&2)
+        );
+        assert!(compare(&base, &vs).clean());
+    }
+
+    #[test]
+    fn overage_and_stale_are_flagged() {
+        let base = parse("panic-in-lib src/a.rs 1\nnondet-iteration src/b.rs 2\n")
+            .expect("parses");
+        // a.rs grew to 2 (over), b.rs dropped to 0 (stale)
+        let vs = vec![v("panic-in-lib", "src/a.rs", 3), v("panic-in-lib", "src/a.rs", 4)];
+        let cmp = compare(&base, &vs);
+        assert_eq!(cmp.over.len(), 1);
+        assert_eq!(cmp.over[0].0.actual, 2);
+        assert_eq!(cmp.over[0].0.allowed, 1);
+        assert_eq!(cmp.over[0].1.len(), 2);
+        assert_eq!(cmp.stale.len(), 1);
+        assert_eq!(cmp.stale[0].path, "src/b.rs");
+    }
+
+    #[test]
+    fn bad_lines_are_rejected() {
+        assert!(parse("just-two fields\n").is_err());
+        assert!(parse("a b c d\n").is_err());
+        assert!(parse("a b notanumber\n").is_err());
+        assert!(parse("a b 0\n").is_err());
+        assert!(parse("a b 1\na b 2\n").is_err());
+        assert!(parse("# comment\n\na b 3\n").is_ok());
+    }
+}

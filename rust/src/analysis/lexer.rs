@@ -1,0 +1,545 @@
+//! Token-level Rust lexer for `pallas-lint`.
+//!
+//! Deliberately not a full parser: the lint rules only need a stream of
+//! identifiers and punctuation with comments, string/char literals and
+//! test-gated items out of the way.  Three jobs:
+//!
+//! 1. [`lex`] — strip line/nested-block comments, regular / raw / byte
+//!    string literals and char literals (while distinguishing
+//!    lifetimes), and emit [`Tok`]s with line numbers;
+//! 2. [`lex`] also collects `// pallas-lint: allow(rule, reason)`
+//!    [`Suppression`]s from line comments;
+//! 3. [`strip_test_gated`] — drop any item behind a `#[cfg(...)]`
+//!    attribute whose predicate mentions `test` (covers `cfg(test)`,
+//!    `cfg(all(test, feature = "x"))`, ...), so test-only code is
+//!    exempt from library rules.
+
+/// One lexical token: an identifier, a number, `::`, or a single
+/// punctuation character.  String and comment contents are never
+/// emitted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub text: String,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// A parsed `pallas-lint: allow(rule, reason)` comment.  An empty
+/// `rule` marks a comment that mentioned pallas-lint but did not parse;
+/// an empty `reason` marks a missing (mandatory) justification.  Both
+/// are reported as `bad-suppression` violations by the scanner.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Suppression {
+    /// Line the comment sits on; it applies to violations on this line
+    /// and the next.
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Output of [`lex`].
+#[derive(Debug, Clone)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub suppressions: Vec<Suppression>,
+}
+
+/// Parse one line comment's text for a suppression directive.  The
+/// directive must open the comment (`// pallas-lint: ...`); mentions of
+/// the syntax mid-sentence or in doc comments (`/// ...`) are ignored.
+fn parse_suppression(comment: &str, line: usize) -> Option<Suppression> {
+    let trimmed = comment.trim_start();
+    let rest = trimmed.strip_prefix("pallas-lint")?;
+    let malformed = Suppression {
+        line,
+        rule: String::new(),
+        reason: String::new(),
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix(':') else {
+        return Some(malformed);
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix("allow") else {
+        return Some(malformed);
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return Some(malformed);
+    };
+    let Some(close) = rest.rfind(')') else {
+        return Some(malformed);
+    };
+    let inner = &rest[..close];
+    let (rule, reason) = match inner.split_once(',') {
+        Some((r, why)) => (r.trim().to_string(), why.trim().to_string()),
+        None => (inner.trim().to_string(), String::new()),
+    };
+    Some(Suppression { line, rule, reason })
+}
+
+/// Does a raw (or raw-byte) string literal start at `i`?  Returns the
+/// index just past the opening quote plus the `#` count.
+fn raw_string_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Skip past a raw string body opened with `hashes` hash marks.
+fn skip_raw_string(b: &[u8], mut j: usize, hashes: usize, line: &mut usize) -> usize {
+    while j < b.len() {
+        if b[j] == b'\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while seen < hashes && b.get(k) == Some(&b'#') {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return k;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Skip a regular (escaped) string body; `j` points past the opening
+/// quote.
+fn skip_string(b: &[u8], mut j: usize, line: &mut usize) -> usize {
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            b'\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Width in bytes of the UTF-8 scalar starting at `c`.
+fn utf8_width(c: u8) -> usize {
+    if c < 0x80 {
+        1
+    } else if c < 0xE0 {
+        2
+    } else if c < 0xF0 {
+        3
+    } else {
+        4
+    }
+}
+
+/// Lex Rust source into tokens + suppression directives.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut suppressions: Vec<Suppression> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. doc comments) — suppression carrier
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < b.len() && b[j] != b'\n' {
+                j += 1;
+            }
+            if let Ok(text) = std::str::from_utf8(&b[start..j]) {
+                if let Some(s) = parse_suppression(text, line) {
+                    suppressions.push(s);
+                }
+            }
+            i = j;
+            continue;
+        }
+        // nested block comment
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // string literal
+        if c == b'"' {
+            i = skip_string(b, i + 1, &mut line);
+            continue;
+        }
+        // raw / raw-byte string literal (r"...", r#"..."#, br"...")
+        if (c == b'r' || c == b'b') && raw_string_open(b, i).is_some() {
+            if let Some((open, hashes)) = raw_string_open(b, i) {
+                i = skip_raw_string(b, open, hashes, &mut line);
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            match b.get(i + 1) {
+                Some(&b'\\') => {
+                    // escaped char literal: skip the escape head, then
+                    // scan to the closing quote (covers \u{...})
+                    let mut j = i + 3;
+                    while j < b.len() && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    i = j + 1;
+                }
+                Some(&n) if n != b'\'' => {
+                    let w = utf8_width(n);
+                    if b.get(i + 1 + w) == Some(&b'\'') {
+                        // plain char literal like 'a'
+                        i += 2 + w;
+                    } else {
+                        // lifetime: drop the quote, lex the name as an
+                        // ordinary identifier
+                        i += 1;
+                    }
+                }
+                _ => i += 1,
+            }
+            continue;
+        }
+        // identifier / keyword
+        if c == b'_' || c.is_ascii_alphabetic() {
+            let start = i;
+            while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            toks.push(Tok {
+                text: src[start..i].to_string(),
+                line,
+            });
+            continue;
+        }
+        // number (loose: enough to keep digits out of the punct stream
+        // without eating `..` ranges)
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            if b.get(i) == Some(&b'.')
+                && b.get(i + 1).map(|d| d.is_ascii_digit()).unwrap_or(false)
+            {
+                i += 1;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+            }
+            toks.push(Tok {
+                text: src[start..i].to_string(),
+                line,
+            });
+            continue;
+        }
+        // path separator is the one multi-char operator the rules need
+        if c == b':' && b.get(i + 1) == Some(&b':') {
+            toks.push(Tok {
+                text: "::".to_string(),
+                line,
+            });
+            i += 2;
+            continue;
+        }
+        if c < 0x80 {
+            toks.push(Tok {
+                text: (c as char).to_string(),
+                line,
+            });
+            i += 1;
+        } else {
+            // non-ASCII outside strings/comments: skip the scalar
+            i += utf8_width(c);
+        }
+    }
+    Lexed {
+        toks,
+        suppressions,
+    }
+}
+
+/// Is this attribute token list a test-gating `cfg`?  Any `cfg(...)`
+/// whose predicate mentions `test` (and is not negated) gates its item
+/// out of the library build the rules care about.
+fn is_test_cfg(attr: &[Tok]) -> bool {
+    if attr.first().map(|t| t.text.as_str()) != Some("cfg") {
+        return false;
+    }
+    let has = |s: &str| attr.iter().any(|t| t.text == s);
+    has("test") && !has("not")
+}
+
+/// Skip the item following a stripped attribute: further attributes,
+/// then either a `;`-terminated item or a braced body.
+fn skip_item(toks: &[Tok], mut i: usize) -> usize {
+    loop {
+        if toks.get(i).map(|t| t.text.as_str()) == Some("#") {
+            let mut j = i + 1;
+            if toks.get(j).map(|t| t.text.as_str()) == Some("!") {
+                j += 1;
+            }
+            if toks.get(j).map(|t| t.text.as_str()) == Some("[") {
+                let mut depth = 1usize;
+                let mut k = j + 1;
+                while k < toks.len() && depth > 0 {
+                    match toks[k].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => depth -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                i = k;
+                continue;
+            }
+        }
+        break;
+    }
+    let mut depth = 0i64; // ( and [ nesting before the body
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            ";" if depth <= 0 => return i + 1,
+            "{" if depth <= 0 => {
+                let mut braces = 1i64;
+                i += 1;
+                while i < toks.len() && braces > 0 {
+                    match toks[i].text.as_str() {
+                        "{" => braces += 1,
+                        "}" => braces -= 1,
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                return i;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Drop every item gated behind a test `cfg` attribute, returning the
+/// library-only token stream the rules run over.
+pub fn strip_test_gated(toks: Vec<Tok>) -> Vec<Tok> {
+    let mut out: Vec<Tok> = Vec::with_capacity(toks.len());
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text == "#" {
+            let mut j = i + 1;
+            if toks.get(j).map(|t| t.text.as_str()) == Some("!") {
+                j += 1;
+            }
+            if toks.get(j).map(|t| t.text.as_str()) == Some("[") {
+                let mut depth = 1usize;
+                let mut k = j + 1;
+                while k < toks.len() && depth > 0 {
+                    match toks[k].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => depth -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                let attr_end = k.saturating_sub(1);
+                if is_test_cfg(&toks[j + 1..attr_end]) {
+                    i = skip_item(&toks, k);
+                    continue;
+                }
+                out.extend(toks[i..k].iter().cloned());
+                i = k;
+                continue;
+            }
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let toks = idents(
+            "let x = \"HashMap inside\"; // HashMap in comment\n/* HashMap\nblock */ let y = 1;",
+        );
+        assert!(!toks.iter().any(|t| t == "HashMap"), "{toks:?}");
+        assert!(toks.contains(&"x".to_string()));
+        assert!(toks.contains(&"y".to_string()));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let toks = idents("let a = r#\"spawn \" inner\"#; let b = br\"spawn\"; let c = b\"x\\\"y\";");
+        assert!(!toks.iter().any(|t| t == "spawn"), "{toks:?}");
+        assert!(toks.contains(&"c".to_string()));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let toks = idents("fn f<'a>(x: &'a str) { let c = 'x'; let q = '\\''; let u = '\\u{1F600}'; }");
+        assert!(toks.contains(&"a".to_string())); // lifetime name survives
+        assert!(toks.contains(&"str".to_string()));
+        // char contents never leak as tokens
+        assert!(!toks.iter().any(|t| t == "1F600"));
+    }
+
+    #[test]
+    fn byte_char_literals() {
+        let toks = idents("if c == b'{' || c == b'\\t' { x(); }");
+        assert!(toks.contains(&"x".to_string()));
+        assert_eq!(toks.iter().filter(|t| t.as_str() == "{").count(), 1);
+    }
+
+    #[test]
+    fn line_numbers() {
+        let l = lex("a\nb\n  c");
+        let lines: Vec<usize> = l.toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn double_colon_is_one_token() {
+        let toks = idents("std::thread::spawn");
+        assert_eq!(toks, vec!["std", "::", "thread", "::", "spawn"]);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let toks = idents("for i in 0..n { let x = 1.5; let h = 0xFF; }");
+        assert!(toks.contains(&"0".to_string()));
+        assert!(toks.contains(&"1.5".to_string()));
+        assert!(toks.contains(&"0xFF".to_string()));
+        assert_eq!(toks.iter().filter(|t| t.as_str() == ".").count(), 2);
+    }
+
+    #[test]
+    fn suppression_parsing() {
+        let l = lex("// pallas-lint: allow(panic-in-lib, keeps worker panics loud)\nx.unwrap();");
+        assert_eq!(l.suppressions.len(), 1);
+        let s = &l.suppressions[0];
+        assert_eq!(s.line, 1);
+        assert_eq!(s.rule, "panic-in-lib");
+        assert_eq!(s.reason, "keeps worker panics loud");
+    }
+
+    #[test]
+    fn doc_and_prose_mentions_are_not_suppressions() {
+        let l = lex(
+            "/// Use `// pallas-lint: allow(rule, reason)` to suppress.\n// see pallas-lint: allow(x, y) above\n",
+        );
+        assert!(l.suppressions.is_empty(), "{:?}", l.suppressions);
+    }
+
+    #[test]
+    fn suppression_without_reason_or_malformed() {
+        let l = lex("// pallas-lint: allow(panic-in-lib)\n// pallas-lint allow broken\n");
+        assert_eq!(l.suppressions.len(), 2);
+        assert_eq!(l.suppressions[0].rule, "panic-in-lib");
+        assert!(l.suppressions[0].reason.is_empty());
+        assert!(l.suppressions[1].rule.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_stripped() {
+        let src = "fn lib() { a(); }\n#[cfg(test)]\nmod tests { fn t() { x.unwrap(); } }\nfn tail() { b(); }";
+        let toks = strip_test_gated(lex(src).toks);
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(!texts.contains(&"unwrap"));
+        assert!(texts.contains(&"lib"));
+        assert!(texts.contains(&"tail"));
+    }
+
+    #[test]
+    fn cfg_all_test_feature_is_stripped_but_not_cfg_feature() {
+        let src = "#[cfg(all(test, feature = \"pjrt\"))]\nmod tests { fn t() { x.unwrap(); } }\n#[cfg(feature = \"pjrt\")]\nfn real() { keepme(); }";
+        let toks = strip_test_gated(lex(src).toks);
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(!texts.contains(&"unwrap"));
+        assert!(texts.contains(&"keepme"));
+    }
+
+    #[test]
+    fn cfg_not_test_is_kept() {
+        let src = "#[cfg(not(test))]\nfn real() { keepme(); }";
+        let toks = strip_test_gated(lex(src).toks);
+        assert!(toks.iter().any(|t| t.text == "keepme"));
+    }
+
+    #[test]
+    fn cfg_test_semicolon_item() {
+        let src = "#[cfg(test)]\nuse std::collections::HashMap;\nfn lib() {}";
+        let toks = strip_test_gated(lex(src).toks);
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(!texts.contains(&"HashMap"));
+        assert!(texts.contains(&"lib"));
+    }
+
+    #[test]
+    fn stacked_attributes_after_cfg_test() {
+        let src = "#[cfg(test)]\n#[allow(dead_code)]\nfn t() { x.unwrap(); }\nfn lib() {}";
+        let toks = strip_test_gated(lex(src).toks);
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(!texts.contains(&"unwrap"));
+        assert!(texts.contains(&"lib"));
+    }
+}

@@ -1,0 +1,195 @@
+//! `pallas-lint`: in-tree determinism & robustness static analysis.
+//!
+//! The reproduction's headline guarantee — bit-identical parallel runs,
+//! seed-driven faults, stable `KnowledgeBase::digest` — rests on coding
+//! invariants no compiler checks: deterministic-iteration containers,
+//! one thread pool, one clock, one seeded RNG, no library panics, and
+//! fault code that only touches sim state through the hook API.  This
+//! module turns those invariants into machine-checked rules:
+//!
+//! | code | id                  | invariant                                     |
+//! |------|---------------------|-----------------------------------------------|
+//! | R1   | `nondet-iteration`  | no `HashMap`/`HashSet`                        |
+//! | R2   | `ad-hoc-thread`     | no `thread::spawn`/`scope` outside `util::par`|
+//! | R3   | `ad-hoc-clock`      | no `Instant`/`SystemTime` outside `util::timer`|
+//! | R4   | `ad-hoc-entropy`    | no OS-entropy RNG outside `util::rng`         |
+//! | R5   | `panic-in-lib`      | no `.unwrap()`/`.expect()`/`panic!` in lib code|
+//! | R6   | `fault-hook-bypass` | faults use the hook API, never `&mut` sim state|
+//!
+//! Violations can be suppressed in place with a mandatory reason:
+//!
+//! ```text
+//! // pallas-lint: allow(rule-id, why this one is sound)
+//! ```
+//!
+//! The comment covers its own line and the next.  A missing reason or
+//! unknown rule id is itself reported (`bad-suppression`).  Pre-existing
+//! debt lives in `rust/lint-baseline.txt` (see [`baseline`]) and only
+//! ratchets down.  The scanner is exposed as the `pallas-lint` binary
+//! (`src/bin/pallas_lint.rs`), gated in `scripts/ci.sh`.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::err::{Context, Result};
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule id (`panic-in-lib`, ... or `bad-suppression`).
+    pub rule: &'static str,
+    /// Crate-relative `/`-separated path (`src/offline/cache.rs`).
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Short token-level excerpt of what matched.
+    pub snippet: String,
+}
+
+/// Scan one file's source, applying every rule, honoring suppressions,
+/// and reporting invalid suppressions.  `path` must be the normalized
+/// crate-relative path the rules key their exemptions on.
+pub fn scan_source(path: &str, source: &str) -> Vec<Violation> {
+    let lexed = lexer::lex(source);
+    let lib_toks = lexer::strip_test_gated(lexed.toks);
+
+    let mut raw: Vec<Violation> = Vec::new();
+    for rule in rules::registry() {
+        for (line, snippet) in (rule.matcher)(path, &lib_toks) {
+            raw.push(Violation {
+                rule: rule.id,
+                path: path.to_string(),
+                line,
+                snippet,
+            });
+        }
+    }
+
+    let mut out: Vec<Violation> = Vec::new();
+    let mut valid: Vec<&lexer::Suppression> = Vec::new();
+    for s in &lexed.suppressions {
+        if s.rule.is_empty() || !rules::is_known_rule(&s.rule) {
+            out.push(Violation {
+                rule: rules::SUPPRESSION_RULE,
+                path: path.to_string(),
+                line: s.line,
+                snippet: if s.rule.is_empty() {
+                    "malformed pallas-lint comment".to_string()
+                } else {
+                    format!("unknown rule id `{}`", s.rule)
+                },
+            });
+        } else if s.reason.is_empty() {
+            out.push(Violation {
+                rule: rules::SUPPRESSION_RULE,
+                path: path.to_string(),
+                line: s.line,
+                snippet: format!("allow({}) without a reason", s.rule),
+            });
+        } else {
+            valid.push(s);
+        }
+    }
+
+    for v in raw {
+        let suppressed = valid
+            .iter()
+            .any(|s| s.rule == v.rule && (s.line == v.line || s.line + 1 == v.line));
+        if !suppressed {
+            out.push(v);
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Recursively collect `.rs` files under `dir` in sorted order.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("read dir {}", dir.display()))?
+    {
+        let entry = entry.with_context(|| format!("read dir {}", dir.display()))?;
+        entries.push(entry.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root` (typically `rust/src`).  Paths in
+/// the returned violations are normalized to `src/...` with `/`
+/// separators regardless of the invocation directory, so baseline
+/// entries are stable.
+pub fn scan_tree(root: &Path) -> Result<Vec<Violation>> {
+    let prefix = root
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "src".to_string());
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut out: Vec<Violation> = Vec::new();
+    for f in &files {
+        let rel_part = f.strip_prefix(root).unwrap_or(f);
+        let mut rel = prefix.clone();
+        for comp in rel_part.components() {
+            rel.push('/');
+            rel.push_str(&comp.as_os_str().to_string_lossy());
+        }
+        let src = std::fs::read_to_string(f)
+            .with_context(|| format!("read source {}", f.display()))?;
+        out.extend(scan_source(&rel, &src));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suppression_covers_same_and_next_line() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   // pallas-lint: allow(panic-in-lib, checked by caller)\n\
+                   x.unwrap()\n\
+                   }\n\
+                   fn g(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let vs = scan_source("src/demo.rs", src);
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].line, 5);
+    }
+
+    #[test]
+    fn suppression_does_not_leak_across_rules() {
+        let src = "// pallas-lint: allow(panic-in-lib, wrong rule)\nuse std::collections::HashMap;\n";
+        let vs = scan_source("src/demo.rs", src);
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].rule, "nondet-iteration");
+    }
+
+    #[test]
+    fn reasonless_suppression_is_flagged_and_inert() {
+        let src = "// pallas-lint: allow(panic-in-lib)\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let vs = scan_source("src/demo.rs", src);
+        let rules: Vec<&str> = vs.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&"bad-suppression"), "{vs:?}");
+        assert!(rules.contains(&"panic-in-lib"), "{vs:?}");
+    }
+
+    #[test]
+    fn unknown_rule_suppression_is_flagged() {
+        let src = "// pallas-lint: allow(no-such-rule, because)\nfn f() {}\n";
+        let vs = scan_source("src/demo.rs", src);
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].rule, "bad-suppression");
+    }
+}

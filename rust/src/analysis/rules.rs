@@ -1,0 +1,282 @@
+//! The `pallas-lint` rule registry.
+//!
+//! Each rule is a pure function over the library-only token stream (see
+//! [`crate::analysis::lexer::strip_test_gated`]) plus the file's
+//! crate-relative path (`src/...`, always `/`-separated).  Rules return
+//! `(line, snippet)` pairs; suppression and baseline filtering happen
+//! in [`crate::analysis::scan_source`].
+
+use crate::analysis::lexer::Tok;
+
+/// One lint rule.
+pub struct Rule {
+    /// Stable kebab-case id used in suppressions and the baseline.
+    pub id: &'static str,
+    /// Short code shown in human output (R1..R6).
+    pub code: &'static str,
+    /// One-line description for `--list-rules`.
+    pub summary: &'static str,
+    pub matcher: fn(&str, &[Tok]) -> Vec<(usize, String)>,
+}
+
+/// Pseudo-rule id for invalid suppression comments (unknown rule id or
+/// missing reason).  Not suppressible and never baselined.
+pub const SUPPRESSION_RULE: &str = "bad-suppression";
+
+/// Token text at `i`, or `""` past the end.
+fn txt(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+fn is_ident(s: &str) -> bool {
+    s.chars()
+        .next()
+        .map(|c| c == '_' || c.is_ascii_alphabetic())
+        .unwrap_or(false)
+}
+
+/// R1: hash containers iterate in randomized order (`RandomState`),
+/// which poisons digests, serialized artifacts and eviction decisions.
+/// `BTreeMap`/`BTreeSet` (or a `Vec`) are the sanctioned containers.
+fn nondet_iteration(_path: &str, toks: &[Tok]) -> Vec<(usize, String)> {
+    toks.iter()
+        .filter(|t| t.text == "HashMap" || t.text == "HashSet")
+        .map(|t| (t.line, t.text.clone()))
+        .collect()
+}
+
+/// R2: ad-hoc threads bypass the deterministic pool's ordered
+/// reduction and nested-parallelism guard; all fan-out goes through
+/// `util::par`.
+fn ad_hoc_thread(path: &str, toks: &[Tok]) -> Vec<(usize, String)> {
+    if path == "src/util/par.rs" {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.text == "thread"
+            && txt(toks, i + 1) == "::"
+            && matches!(txt(toks, i + 2), "spawn" | "scope")
+        {
+            out.push((t.line, format!("thread::{}", txt(toks, i + 2))));
+        }
+        if t.text == "." && txt(toks, i + 1) == "spawn" && txt(toks, i + 2) == "(" {
+            out.push((toks[i + 1].line, ".spawn(...)".to_string()));
+        }
+    }
+    out
+}
+
+/// R3: wall-clock reads make runs time-dependent; all timing goes
+/// through `util::timer` so experiments stay replayable.
+fn ad_hoc_clock(path: &str, toks: &[Tok]) -> Vec<(usize, String)> {
+    if path == "src/util/timer.rs" {
+        return Vec::new();
+    }
+    toks.iter()
+        .filter(|t| t.text == "Instant" || t.text == "SystemTime")
+        .map(|t| (t.line, t.text.clone()))
+        .collect()
+}
+
+/// R4: entropy must come from the in-tree seeded `util::rng::Rng`;
+/// OS-entropy constructors and external RNG crates break seed-driven
+/// reproducibility.  (Seeded `Rng::new(seed)` is the sanctioned path
+/// and is not flagged.)
+fn ad_hoc_entropy(path: &str, toks: &[Tok]) -> Vec<(usize, String)> {
+    if path == "src/util/rng.rs" {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if matches!(
+            t.text.as_str(),
+            "thread_rng" | "from_entropy" | "getrandom" | "RandomState"
+        ) {
+            out.push((t.line, t.text.clone()));
+        }
+        if t.text == "rand" && txt(toks, i + 1) == "::" {
+            out.push((t.line, "rand::".to_string()));
+        }
+    }
+    out
+}
+
+/// R5: library code must surface failures as `util::err::Result` (via
+/// the `Context` trait / `bail!`), never panic.  `src/main.rs` and
+/// `src/bin/**` are exempt (top-level binaries may crash on bad input);
+/// test-gated code was already stripped from the token stream.
+fn panic_in_lib(path: &str, toks: &[Tok]) -> Vec<(usize, String)> {
+    if path == "src/main.rs" || path.starts_with("src/bin/") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.text == "."
+            && matches!(txt(toks, i + 1), "unwrap" | "expect")
+            && txt(toks, i + 2) == "("
+        {
+            out.push((toks[i + 1].line, format!(".{}(...)", txt(toks, i + 1))));
+        }
+        if matches!(t.text.as_str(), "panic" | "todo" | "unimplemented")
+            && txt(toks, i + 1) == "!"
+        {
+            out.push((t.line, format!("{}!", t.text)));
+        }
+    }
+    out
+}
+
+/// Sim-state types fault code may only touch through the hook API
+/// (`FaultInjector` / recovery plans), never via `&mut`.
+const SIM_STATE_TYPES: [&str; 7] = [
+    "NetProfile",
+    "LoadState",
+    "SimEnv",
+    "MultiUserSim",
+    "TrafficProcess",
+    "ThroughputModel",
+    "Dataset",
+];
+
+/// R6: fault code bypassing the hook API — reaching into the sim
+/// engine modules or taking `&mut` references to sim-state types —
+/// would make fault effects depend on call order instead of the seeded
+/// fault plan.
+fn fault_hook_bypass(path: &str, toks: &[Tok]) -> Vec<(usize, String)> {
+    if !path.starts_with("src/faults/") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.text == "crate"
+            && txt(toks, i + 1) == "::"
+            && txt(toks, i + 2) == "sim"
+            && txt(toks, i + 3) == "::"
+            && matches!(txt(toks, i + 4), "engine" | "multiuser")
+        {
+            out.push((t.line, format!("crate::sim::{}", txt(toks, i + 4))));
+        }
+        if t.text == "&" && txt(toks, i + 1) == "mut" {
+            // walk the path that follows (`a :: b :: Type`) and check
+            // the last identifier against the protected sim-state set
+            let mut j = i + 2;
+            let mut last: Option<usize> = None;
+            while j < toks.len() {
+                let s = toks[j].text.as_str();
+                if s == "::" {
+                    j += 1;
+                    continue;
+                }
+                if is_ident(s) {
+                    last = Some(j);
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            if let Some(k) = last {
+                if SIM_STATE_TYPES.contains(&toks[k].text.as_str()) {
+                    out.push((toks[k].line, format!("&mut {}", toks[k].text)));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The full registry, in rule-code order.
+pub fn registry() -> Vec<Rule> {
+    vec![
+        Rule {
+            id: "nondet-iteration",
+            code: "R1",
+            summary: "no HashMap/HashSet (randomized iteration order); use BTreeMap/BTreeSet/Vec",
+            matcher: nondet_iteration,
+        },
+        Rule {
+            id: "ad-hoc-thread",
+            code: "R2",
+            summary: "no thread::spawn/scope outside util::par (deterministic pool required)",
+            matcher: ad_hoc_thread,
+        },
+        Rule {
+            id: "ad-hoc-clock",
+            code: "R3",
+            summary: "no Instant/SystemTime outside util::timer (wall-clock breaks replay)",
+            matcher: ad_hoc_clock,
+        },
+        Rule {
+            id: "ad-hoc-entropy",
+            code: "R4",
+            summary: "no OS-entropy RNG construction outside util::rng (seeded Rng::new only)",
+            matcher: ad_hoc_entropy,
+        },
+        Rule {
+            id: "panic-in-lib",
+            code: "R5",
+            summary: "no .unwrap()/.expect()/panic! in library code; use util::err::Context",
+            matcher: panic_in_lib,
+        },
+        Rule {
+            id: "fault-hook-bypass",
+            code: "R6",
+            summary: "fault code must use the hook API, not mutate sim state directly",
+            matcher: fault_hook_bypass,
+        },
+    ]
+}
+
+/// Is `id` a registered rule id (suppression target)?
+pub fn is_known_rule(id: &str) -> bool {
+    registry().iter().any(|r| r.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer;
+
+    fn hits(rule_id: &str, path: &str, src: &str) -> Vec<(usize, String)> {
+        let toks = lexer::strip_test_gated(lexer::lex(src).toks);
+        let reg = registry();
+        let rule = reg.iter().find(|r| r.id == rule_id).expect("known rule");
+        (rule.matcher)(path, &toks)
+    }
+
+    #[test]
+    fn unwrap_variants_are_not_flagged() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) + x.unwrap_or_else(|| 1) + x.unwrap_or_default() }";
+        assert!(hits("panic-in-lib", "src/lib.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_path_is_not_flagged() {
+        // std::panic::catch_unwind must not match `panic!`
+        let src = "fn f() { let _ = std::panic::catch_unwind(|| 1); }";
+        assert!(hits("panic-in-lib", "src/lib.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bin_paths_are_panic_exempt() {
+        let src = "fn main() { foo().unwrap(); }";
+        assert!(hits("panic-in-lib", "src/main.rs", src).is_empty());
+        assert!(hits("panic-in-lib", "src/bin/pallas_lint.rs", src).is_empty());
+        assert_eq!(hits("panic-in-lib", "src/offline/mod.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn seeded_rng_is_sanctioned() {
+        let src = "fn f() { let mut r = Rng::new(42); let _ = r.next_f64(); }";
+        assert!(hits("ad-hoc-entropy", "src/sim/engine.rs", src).is_empty());
+        let bad = "fn f() { let mut r = rand::thread_rng(); }";
+        assert!(!hits("ad-hoc-entropy", "src/sim/engine.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn fault_rule_only_fires_under_faults() {
+        let src = "fn f(p: &mut crate::sim::profile::NetProfile) {}";
+        assert!(!hits("fault-hook-bypass", "src/faults/engine.rs", src).is_empty());
+        assert!(hits("fault-hook-bypass", "src/sim/engine.rs", src).is_empty());
+    }
+}

@@ -73,7 +73,7 @@ impl Harp {
         } else if let Some((best, th)) = self
             .observations
             .iter()
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
         {
             self.chosen = *best;
             self.predicted = Some(*th);

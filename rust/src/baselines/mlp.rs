@@ -43,7 +43,7 @@ impl Mlp {
         let mut acts = vec![x.to_vec()];
         let last = self.weights.len() - 1;
         for (l, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
-            let prev = acts.last().unwrap();
+            let prev = &acts[l];
             let mut z: Vec<f64> = w
                 .iter()
                 .zip(b)
@@ -62,13 +62,13 @@ impl Mlp {
     }
 
     pub fn predict(&self, x: &[f64]) -> Vec<f64> {
-        self.forward_full(x).pop().unwrap()
+        self.forward_full(x).pop().unwrap_or_default()
     }
 
     /// One SGD step on a single example; returns the example's MSE.
     pub fn train_step(&mut self, x: &[f64], y: &[f64], lr: f64) -> f64 {
         let acts = self.forward_full(x);
-        let out = acts.last().unwrap();
+        let out = &acts[self.weights.len()];
         assert_eq!(y.len(), out.len());
         // output delta (linear output, MSE): dL/dz = (out - y)
         let mut delta: Vec<f64> = out.iter().zip(y).map(|(o, t)| o - t).collect();

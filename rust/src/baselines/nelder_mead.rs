@@ -79,7 +79,7 @@ impl NelderMead {
     fn order(&mut self) {
         // sort vertices by value descending (we maximize)
         let mut idx = [0usize, 1, 2, 3];
-        idx.sort_by(|&a, &b| self.values[b].partial_cmp(&self.values[a]).unwrap());
+        idx.sort_by(|&a, &b| self.values[b].total_cmp(&self.values[a]));
         self.simplex = idx.map(|i| self.simplex[i]);
         self.values = idx.map(|i| self.values[i]);
     }

@@ -1,0 +1,165 @@
+//! `pallas-lint` — determinism & robustness lint over the crate
+//! sources (see `twophase::analysis` for the rule registry).
+//!
+//! ```text
+//! pallas-lint [--root DIR] [--json] [--baseline [PATH]]
+//!             [--write-baseline] [--list-rules]
+//! ```
+//!
+//! * no flags: scan and report every violation (exit 1 if any);
+//! * `--baseline`: compare against the checked-in allowance file
+//!   (default `<root>/../lint-baseline.txt`) and fail on new
+//!   violations *and* on stale entries — this is the CI gate;
+//! * `--write-baseline`: regenerate the allowance file from the
+//!   current scan (for paying down or re-triaging debt);
+//! * `--json`: machine-readable report on stdout.
+//!
+//! Exit codes: 0 clean, 1 violations / baseline drift, 2 usage or I/O
+//! error.
+
+use std::path::{Path, PathBuf};
+
+use twophase::analysis::{baseline, rules, scan_tree, Violation};
+use twophase::util::cli::Args;
+use twophase::util::err::{Context, Result};
+
+fn main() {
+    let args = Args::from_env();
+    match run(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("pallas-lint: error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn violation_json(v: &Violation) -> twophase::util::json::Value {
+    use twophase::util::json::Value;
+    Value::obj(vec![
+        ("rule", Value::str(v.rule)),
+        ("path", Value::str(v.path.as_str())),
+        ("line", Value::Num(v.line as f64)),
+        ("snippet", Value::str(v.snippet.as_str())),
+    ])
+}
+
+fn print_violations(vs: &[Violation]) {
+    for v in vs {
+        println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.snippet);
+    }
+}
+
+fn run(args: &Args) -> Result<i32> {
+    if args.flag("list-rules") {
+        for r in rules::registry() {
+            println!("{}  {:<18} {}", r.code, r.id, r.summary);
+        }
+        return Ok(0);
+    }
+
+    // Default root works both from rust/ (cargo run) and the repo root.
+    let root: PathBuf = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None if Path::new("src").is_dir() => PathBuf::from("src"),
+        None => PathBuf::from("rust/src"),
+    };
+    if !root.is_dir() {
+        twophase::bail!(
+            "source root `{}` not found (pass --root DIR)",
+            root.display()
+        );
+    }
+
+    let mut violations = scan_tree(&root)?;
+    violations.sort_by(|a, b| {
+        (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule))
+    });
+    let json = args.flag("json");
+
+    let baseline_path: PathBuf = match args.get("baseline") {
+        Some("true") | None => root
+            .parent()
+            .unwrap_or(Path::new("."))
+            .join("lint-baseline.txt"),
+        Some(p) => PathBuf::from(p),
+    };
+
+    if args.flag("write-baseline") {
+        std::fs::write(&baseline_path, baseline::render(&violations))
+            .with_context(|| format!("write {}", baseline_path.display()))?;
+        println!(
+            "pallas-lint: wrote {} ({} entries)",
+            baseline_path.display(),
+            baseline::counts(&violations).len()
+        );
+        return Ok(0);
+    }
+
+    if args.flag("baseline") {
+        let text = std::fs::read_to_string(&baseline_path)
+            .with_context(|| format!("read baseline {}", baseline_path.display()))?;
+        let base = baseline::parse(&text)?;
+        let cmp = baseline::compare(&base, &violations);
+        if json {
+            use twophase::util::json::Value;
+            let over: Vec<Value> = cmp
+                .over
+                .iter()
+                .flat_map(|(_, vs)| vs.iter().map(violation_json))
+                .collect();
+            let stale: Vec<Value> = cmp
+                .stale
+                .iter()
+                .map(|d| {
+                    Value::obj(vec![
+                        ("rule", Value::str(d.rule.as_str())),
+                        ("path", Value::str(d.path.as_str())),
+                        ("allowed", Value::Num(d.allowed as f64)),
+                        ("actual", Value::Num(d.actual as f64)),
+                    ])
+                })
+                .collect();
+            println!(
+                "{}",
+                Value::obj(vec![
+                    ("clean", Value::Bool(cmp.clean())),
+                    ("over", Value::Arr(over)),
+                    ("stale", Value::Arr(stale)),
+                ])
+            );
+        } else {
+            for (d, vs) in &cmp.over {
+                eprintln!(
+                    "pallas-lint: {} in {}: {} violation(s), baseline allows {}",
+                    d.rule, d.path, d.actual, d.allowed
+                );
+                print_violations(vs);
+            }
+            for d in &cmp.stale {
+                eprintln!(
+                    "pallas-lint: stale baseline entry: {} {} {} (now {}) — shrink or delete it",
+                    d.rule, d.path, d.allowed, d.actual
+                );
+            }
+            if cmp.clean() {
+                println!("pallas-lint: clean against baseline");
+            }
+        }
+        return Ok(if cmp.clean() { 0 } else { 1 });
+    }
+
+    if json {
+        use twophase::util::json::Value;
+        println!(
+            "{}",
+            Value::Arr(violations.iter().map(violation_json).collect())
+        );
+    } else if violations.is_empty() {
+        println!("pallas-lint: clean");
+    } else {
+        print_violations(&violations);
+        eprintln!("pallas-lint: {} violation(s)", violations.len());
+    }
+    Ok(if violations.is_empty() { 0 } else { 1 })
+}

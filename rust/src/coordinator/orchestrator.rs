@@ -21,7 +21,8 @@ use crate::online::controller::{DynamicTuner, TunerConfig};
 use crate::sim::dataset::Dataset;
 use crate::sim::engine::{ChunkFault, ChunkSample, SimEnv, TransferOutcome};
 use crate::sim::profile::NetProfile;
-use std::sync::{mpsc, Arc, Mutex};
+use crate::util::err::Result;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 
 /// One transfer job.
 #[derive(Debug, Clone)]
@@ -103,29 +104,44 @@ pub struct Orchestrator {
 }
 
 impl Orchestrator {
+    /// Fails when the knowledge base has no surface sets: every ASM
+    /// query path below relies on at least one set existing, so the
+    /// invariant is enforced once here instead of panicking mid-transfer.
     pub fn new(
         kb: Arc<KnowledgeBase>,
         sp_model: Arc<StaticAnnModel>,
         annot_model: Arc<AnnOtModel>,
         cfg: OrchestratorConfig,
-    ) -> Orchestrator {
+    ) -> Result<Orchestrator> {
+        if kb.sets.is_empty() {
+            crate::bail!(
+                "orchestrator needs a non-empty knowledge base (no surface sets fitted)"
+            );
+        }
         let cache = Mutex::new(TuningCache::new(cfg.cache_capacity.max(1)));
-        Orchestrator {
+        Ok(Orchestrator {
             kb,
             sp_model,
             annot_model,
             cfg,
             cache,
-        }
+        })
     }
 
     fn cache_enabled(&self) -> bool {
         self.cfg.cache_capacity > 0
     }
 
+    /// Lock the tuning cache, recovering the guard if a worker thread
+    /// panicked while holding it (the cache holds plain counters and
+    /// tuning entries; any state it has is still internally consistent).
+    fn lock_cache(&self) -> MutexGuard<'_, TuningCache> {
+        self.cache.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Snapshot of the tuning cache's hit/miss/eviction counters.
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.lock().unwrap().stats()
+        self.lock_cache().stats()
     }
 
     /// Build the per-request optimizer.
@@ -134,13 +150,18 @@ impl Orchestrator {
         let d = &req.dataset;
         match req.model {
             OptimizerKind::Asm => {
-                let set = self
+                // `new` guarantees a non-empty knowledge base, so the
+                // query's final fallback always yields a set; should
+                // that invariant ever break, degrade to the untuned
+                // defaults instead of crashing a live transfer.
+                let Some(set) = self
                     .kb
                     .query(p.rtt_s, p.bandwidth_mbps, d.avg_file_mb, d.n_files)
-                    .expect("knowledge base has surfaces")
-                    .clone();
+                else {
+                    return Box::new(NoOptimization);
+                };
                 Box::new(AsmOptimizer::new(DynamicTuner::new(
-                    set,
+                    set.clone(),
                     self.cfg.tuner.clone(),
                 )))
             }
@@ -182,15 +203,20 @@ impl Orchestrator {
         let p = &req.profile;
         let d = &req.dataset;
         let fp = Fingerprint::of(p.rtt_s, p.bandwidth_mbps, d.avg_file_mb, d.n_files);
-        let cached = self.cache.lock().unwrap().get(fp);
+        let cached = self.lock_cache().get(fp);
         match cached {
             Some(entry) => {
-                let set = self
+                // Same invariant as build_optimizer: fall back to the
+                // cold-start path rather than panic if the knowledge
+                // base somehow lost its sets.
+                let Some(set) = self
                     .kb
                     .query(p.rtt_s, p.bandwidth_mbps, d.avg_file_mb, d.n_files)
-                    .expect("knowledge base has surfaces")
-                    .clone();
-                let tuner = DynamicTuner::with_cached(set, self.cfg.tuner.clone(), &entry);
+                else {
+                    return (self.build_optimizer(req), Some(false));
+                };
+                let tuner =
+                    DynamicTuner::with_cached(set.clone(), self.cfg.tuner.clone(), &entry);
                 (Box::new(AsmOptimizer::new(tuner)), Some(true))
             }
             None => (self.build_optimizer(req), Some(false)),
@@ -338,7 +364,7 @@ impl Orchestrator {
                     req.dataset.avg_file_mb,
                     req.dataset.n_files,
                 );
-                self.cache.lock().unwrap().put(fp, entry);
+                self.lock_cache().put(fp, entry);
             }
         }
 
@@ -379,17 +405,23 @@ impl Orchestrator {
         let (rep_tx, rep_rx) = mpsc::channel::<(u64, TransferReport)>();
         let req_rx = Arc::new(Mutex::new(req_rx));
         for r in requests {
-            req_tx.send(r).unwrap();
+            // the receiver lives until the scope below drains it, so a
+            // send can only fail if the process is already unwinding
+            if req_tx.send(r).is_err() {
+                break;
+            }
         }
         drop(req_tx);
 
+        // pallas-lint: allow(ad-hoc-thread, id-keyed mpsc batch pool predates util::par; results are re-sorted by request id and every transfer is seed-driven, so scheduling cannot leak into the output)
         std::thread::scope(|scope| {
             for _ in 0..self.cfg.workers.max(1) {
                 let rx = Arc::clone(&req_rx);
                 let tx = rep_tx.clone();
+                // pallas-lint: allow(ad-hoc-thread, worker of the deterministic batch pool above)
                 scope.spawn(move || loop {
                     let req = {
-                        let guard = rx.lock().unwrap();
+                        let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
                         guard.recv()
                     };
                     match req {
@@ -436,6 +468,7 @@ mod tests {
                 Arc::new(annot),
                 OrchestratorConfig::default(),
             )
+            .expect("generated history yields a non-empty knowledge base")
         })
     }
 
@@ -521,7 +554,8 @@ mod tests {
                 cache_capacity: 8,
                 ..OrchestratorConfig::default()
             },
-        );
+        )
+        .expect("non-empty knowledge base");
         let req = request(1, OptimizerKind::Asm);
 
         let cold = orch.execute(&req);

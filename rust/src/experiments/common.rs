@@ -63,7 +63,9 @@ impl ExperimentContext {
             Arc::clone(&sp_model),
             Arc::clone(&annot_model),
             OrchestratorConfig::default(),
-        );
+        )
+        // pallas-lint: allow(panic-in-lib, process-wide experiment-harness init; an empty knowledge base from the fixed-seed corpus is unrecoverable and must abort loudly)
+        .expect("experiment corpus yields a non-empty knowledge base");
         ExperimentContext {
             logs,
             kb,

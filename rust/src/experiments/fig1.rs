@@ -55,9 +55,11 @@ pub fn run() -> Fig1Result {
 
     // ASCII heat sketch of the lightest bucket's best slice
     if let Some(b) = set.buckets.first() {
-        if let Some(s) = b.slices.iter().max_by(|a, c| {
-            a.optimal_th.partial_cmp(&c.optimal_th).unwrap()
-        }) {
+        if let Some(s) = b
+            .slices
+            .iter()
+            .max_by(|a, c| a.optimal_th.total_cmp(&c.optimal_th))
+        {
             let dense = s.fitted.surface.dense_eval(2);
             let max = dense
                 .iter()

@@ -48,7 +48,7 @@ pub fn run() -> Fig4aResult {
         within(1.0) * 100.0,
         within(2.0) * 100.0
     );
-    let peak = *histogram.iter().max().unwrap() as f64;
+    let peak = histogram.iter().copied().max().unwrap_or(1).max(1) as f64;
     for (i, &c) in histogram.iter().enumerate() {
         let x = lo + (hi - lo) * (i as f64 + 0.5) / 17.0;
         let bar = "█".repeat((c as f64 / peak * 40.0) as usize);

@@ -38,7 +38,14 @@
 //! * [`coordinator`] — the leader loop: request intake, sample-transfer
 //!   scheduling, chunk streaming, multi-user orchestration, metrics;
 //! * [`experiments`] — one driver per paper table/figure, shared by the
-//!   benches in `rust/benches/` and the CLI.
+//!   benches in `rust/benches/` and the CLI;
+//! * [`analysis`] — `pallas-lint`: a token-level static scanner that
+//!   machine-checks the determinism & robustness invariants the layers
+//!   above rely on (rules R1–R6: deterministic containers, pooled
+//!   threading, one clock, seeded entropy, no library panics,
+//!   fault-hook discipline), with inline suppressions and a ratcheting
+//!   baseline — run via `cargo run --bin pallas-lint`, gated in
+//!   `scripts/ci.sh`.
 //!
 //! # Fault model & recovery
 //!
@@ -60,6 +67,7 @@
 //! `DynamicTuner::rearm`.  `experiments::robustness` sweeps fault
 //! intensity and reports each model's recovered-throughput fraction.
 
+pub mod analysis;
 pub mod baselines;
 pub mod coordinator;
 pub mod experiments;

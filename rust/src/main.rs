@@ -175,7 +175,7 @@ fn build_orchestrator(args: &Args) -> Result<Orchestrator> {
     ));
     let sp = Arc::new(StaticAnnModel::train(&logs, 32, 0xE1));
     let annot = Arc::new(AnnOtModel::train(&logs, 32, 0xE2));
-    Ok(Orchestrator::new(kb, sp, annot, OrchestratorConfig::default()))
+    Orchestrator::new(kb, sp, annot, OrchestratorConfig::default())
 }
 
 fn cmd_transfer(args: &Args) -> Result<()> {

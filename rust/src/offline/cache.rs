@@ -12,11 +12,15 @@
 //! trips the ordinary re-tuning path.
 //!
 //! The cache is a fixed-capacity LRU built from `std` only: a
-//! `HashMap` plus a monotonic access tick, with O(n) min-tick eviction
-//! (capacities are tens of entries, not thousands).  Hit/miss/eviction
-//! counters are surfaced through `coordinator::metrics`.
+//! deterministic-iteration `BTreeMap` keyed by fingerprint, plus a
+//! tick-ordered `BTreeMap` index from access tick back to fingerprint,
+//! so finding the least-recently-used entry is an O(log n) first-key
+//! lookup instead of a full scan.  Ticks are unique (one per
+//! operation), so the index is a bijection and eviction order is fully
+//! deterministic.  Hit/miss/eviction counters are surfaced through
+//! `coordinator::metrics`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::Params;
 
@@ -89,10 +93,15 @@ impl CacheStats {
 }
 
 /// Fixed-capacity LRU map from [`Fingerprint`] to [`CachedTuning`].
+///
+/// `map` holds the entries with their last-access tick; `by_tick` is
+/// the inverse recency index.  Every mutation keeps the two in
+/// lockstep: exactly one `by_tick` key per `map` entry.
 #[derive(Debug)]
 pub struct TuningCache {
     cap: usize,
-    map: HashMap<Fingerprint, (CachedTuning, u64)>,
+    map: BTreeMap<Fingerprint, (CachedTuning, u64)>,
+    by_tick: BTreeMap<u64, Fingerprint>,
     tick: u64,
     stats: CacheStats,
 }
@@ -102,7 +111,8 @@ impl TuningCache {
     pub fn new(cap: usize) -> TuningCache {
         TuningCache {
             cap: cap.max(1),
-            map: HashMap::new(),
+            map: BTreeMap::new(),
+            by_tick: BTreeMap::new(),
             tick: 0,
             stats: CacheStats::default(),
         }
@@ -114,7 +124,9 @@ impl TuningCache {
         self.tick += 1;
         match self.map.get_mut(&fp) {
             Some((tuning, tick)) => {
+                self.by_tick.remove(tick);
                 *tick = self.tick;
+                self.by_tick.insert(self.tick, fp);
                 self.stats.hits += 1;
                 Some(*tuning)
             }
@@ -126,25 +138,28 @@ impl TuningCache {
     }
 
     /// Insert or refresh an entry, evicting the least-recently-used
-    /// fingerprint when over capacity.  Ties on recency (possible only
-    /// across distinct ticks is impossible; ticks are unique) never
-    /// arise, so eviction is deterministic.
+    /// fingerprint when over capacity.  Ticks are unique, so the
+    /// recency index has no ties and eviction is deterministic and
+    /// O(log n): pop the smallest tick.
     pub fn put(&mut self, fp: Fingerprint, tuning: CachedTuning) {
         self.tick += 1;
-        let fresh = self.map.insert(fp, (tuning, self.tick)).is_none();
-        if fresh {
-            self.stats.insertions += 1;
+        match self.map.insert(fp, (tuning, self.tick)) {
+            Some((_, old_tick)) => {
+                self.by_tick.remove(&old_tick);
+            }
+            None => {
+                self.stats.insertions += 1;
+            }
         }
+        self.by_tick.insert(self.tick, fp);
         while self.map.len() > self.cap {
-            // O(n) min-tick scan; cap is small by construction.
-            let oldest = self
-                .map
-                .iter()
-                .min_by_key(|(_, (_, tick))| *tick)
-                .map(|(fp, _)| *fp)
-                .expect("non-empty map over capacity");
-            self.map.remove(&oldest);
-            self.stats.evictions += 1;
+            let Some(oldest_tick) = self.by_tick.keys().next().copied() else {
+                break; // unreachable: index mirrors a non-empty map
+            };
+            if let Some(victim) = self.by_tick.remove(&oldest_tick) {
+                self.map.remove(&victim);
+                self.stats.evictions += 1;
+            }
         }
     }
 
@@ -164,6 +179,7 @@ impl TuningCache {
     /// totals, not window totals).
     pub fn clear(&mut self) {
         self.map.clear();
+        self.by_tick.clear();
     }
 }
 
@@ -232,6 +248,55 @@ mod tests {
         assert_eq!((s.hits, s.misses), (2, 2));
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn tick_index_matches_reference_lru_under_churn() {
+        // Model-based check: replay an interleaved put/get workload
+        // against a Vec-backed reference LRU and require identical
+        // membership, plus a consistent recency index at every step.
+        let cap = 8usize;
+        let mut cache = TuningCache::new(cap);
+        let mut model: Vec<Fingerprint> = Vec::new(); // front = LRU
+        let fp = |i: i32| Fingerprint {
+            rtt_bucket: i,
+            bw_bucket: 0,
+            file_bucket: 0,
+            count_bucket: 0,
+        };
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for _ in 0..500 {
+            // xorshift-style mixer; deterministic workload
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let key = fp((state % 24) as i32);
+            if state & 1 == 0 {
+                cache.put(key, tuning(0));
+                model.retain(|&k| k != key);
+                model.push(key);
+                if model.len() > cap {
+                    model.remove(0);
+                }
+            } else {
+                let hit = cache.get(key).is_some();
+                let model_hit = model.contains(&key);
+                assert_eq!(hit, model_hit);
+                if model_hit {
+                    model.retain(|&k| k != key);
+                    model.push(key);
+                }
+            }
+            assert_eq!(cache.len(), model.len());
+            assert_eq!(cache.by_tick.len(), cache.map.len());
+            for (tick, k) in &cache.by_tick {
+                assert_eq!(cache.map.get(k).map(|(_, t)| *t), Some(*tick));
+            }
+        }
+        // Final membership must agree exactly.
+        for k in &model {
+            assert!(cache.map.contains_key(k));
+        }
     }
 
     #[test]

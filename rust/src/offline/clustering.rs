@@ -36,9 +36,7 @@ impl LogClustering {
             .iter()
             .enumerate()
             .min_by(|(_, a), (_, b)| {
-                sqdist(features, a)
-                    .partial_cmp(&sqdist(features, b))
-                    .unwrap()
+                sqdist(features, a).total_cmp(&sqdist(features, b))
             })
             .map(|(i, _)| i)
             .unwrap_or(0)
@@ -91,7 +89,7 @@ fn assign_to_centroids(
                     .iter()
                     .enumerate()
                     .min_by(|(_, a), (_, b)| {
-                        sqdist(p, a).partial_cmp(&sqdist(p, b)).unwrap()
+                        sqdist(p, a).total_cmp(&sqdist(p, b))
                     })
                     .map(|(i, _)| i)
                     .unwrap_or(0)
@@ -174,7 +172,16 @@ pub fn cluster_logs(
             best = Some(cand_hac);
         }
     }
-    best.expect("k sweep produced at least one candidate")
+    // The sweep range is non-empty (`2..=k_max.max(2)`), so `best` is
+    // always set; the fallback keeps the library panic-free regardless.
+    best.unwrap_or_else(|| LogClustering {
+        scaler,
+        centroids: vec![[0.0; N_FEATURES]],
+        labels: vec![0; points.len()],
+        k: 1,
+        algo: ClusterAlgo::KmeansPP,
+        ch_score: 0.0,
+    })
 }
 
 #[cfg(test)]

@@ -58,12 +58,7 @@ pub fn reseed_empty_clusters(
         return;
     }
     let mut order: Vec<usize> = (0..points.len()).collect();
-    order.sort_by(|&a, &b| {
-        d2[b]
-            .partial_cmp(&d2[a])
-            .expect("finite distances")
-            .then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| d2[b].total_cmp(&d2[a]).then(a.cmp(&b)));
     for (e, &ci) in empties.iter().enumerate() {
         if e < order.len() {
             centroids[ci] = points[order[e]];
@@ -159,6 +154,11 @@ impl KmeansBackend for NativeKmeans {
     }
 }
 
+/// Fixed chunk width for the parallel D² refresh in [`kmeanspp_init`].
+/// Like [`STEP_CHUNK`], boundaries depend only on this constant so the
+/// refreshed distances are bit-identical for any thread count.
+const KPP_CHUNK: usize = 1024;
+
 /// K-means++ seeding: first centroid uniform, the rest D²-weighted.
 pub fn kmeanspp_init(
     points: &[[f64; N_FEATURES]],
@@ -190,9 +190,17 @@ pub fn kmeanspp_init(
             points[chosen]
         };
         centroids.push(next);
-        for (i, p) in points.iter().enumerate() {
-            d2[i] = d2[i].min(sqdist(p, &next));
-        }
+        // Per-point distance refresh: element i depends only on its own
+        // previous value, so it fans out over the pool.  The D²-weighted
+        // centroid-selection scan above stays sequential — each draw
+        // depends on the refreshed distances of the previous one.
+        d2 = par::par_chunk_map(points, KPP_CHUNK, |start, window| {
+            window
+                .iter()
+                .enumerate()
+                .map(|(j, p)| d2[start + j].min(sqdist(p, &next)))
+                .collect()
+        });
     }
     centroids
 }

@@ -24,8 +24,8 @@ pub struct LocalMax {
 
 /// Newton-polish an interior candidate; returns the refined point.
 fn polish(s: &BicubicSurface, mut p: f64, mut cc: f64) -> (f64, f64) {
-    let (plo, phi) = (s.xs[0], *s.xs.last().unwrap());
-    let (clo, chi) = (s.ys[0], *s.ys.last().unwrap());
+    let (plo, phi) = s.p_range();
+    let (clo, chi) = s.cc_range();
     for _ in 0..12 {
         let jet = s.eval_with_derivs(p, cc);
         // solve H dx = -grad (2x2)
@@ -56,8 +56,8 @@ pub fn find_local_maxima(s: &BicubicSurface, rf: usize) -> Vec<LocalMax> {
     let dense = s.dense_eval(rf);
     let rows = dense.len();
     let cols = dense[0].len();
-    let (plo, phi) = (s.xs[0], *s.xs.last().unwrap());
-    let (clo, chi) = (s.ys[0], *s.ys.last().unwrap());
+    let (plo, phi) = s.p_range();
+    let (clo, chi) = s.cc_range();
     let boundary_eps = 1e-6;
 
     let mut out: Vec<LocalMax> = Vec::new();
@@ -134,7 +134,7 @@ pub fn find_local_maxima(s: &BicubicSurface, rf: usize) -> Vec<LocalMax> {
         push_candidate(phi, cc0);
     }
 
-    out.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+    out.sort_by(|a, b| b.value.total_cmp(&a.value));
     out
 }
 

@@ -80,6 +80,7 @@ impl LoadBucketSurfaces {
         self.slices
             .iter()
             .min_by_key(|s| (s.pp as i64 - params.pp as i64).abs())
+            // pallas-lint: allow(panic-in-lib, buckets with zero slices are dropped by the retain() at build time, so every surviving bucket has a slice)
             .expect("bucket has at least one slice")
     }
 
@@ -153,7 +154,7 @@ fn estimate_loads(entries: &[&LogEntry]) -> Vec<f64> {
         .collect();
     // rank -> intensity: the smallest residual is the heaviest load
     let mut order: Vec<usize> = (0..residual.len()).collect();
-    order.sort_by(|&a, &b| residual[a].partial_cmp(&residual[b]).unwrap());
+    order.sort_by(|&a, &b| residual[a].total_cmp(&residual[b]));
     let n = residual.len().max(2) as f64;
     let mut intensity = vec![0.0; residual.len()];
     for (rank, &idx) in order.iter().enumerate() {
@@ -273,7 +274,7 @@ fn build_cluster_set(
         if let Some(best) = b
             .slices
             .iter()
-            .max_by(|x, y| x.optimal_th.partial_cmp(&y.optimal_th).unwrap())
+            .max_by(|x, y| x.optimal_th.total_cmp(&y.optimal_th))
         {
             b.optimal_params = best.optimal_params;
             b.optimal_th = best.optimal_th;
@@ -282,7 +283,7 @@ fn build_cluster_set(
     }
     // drop empty buckets, sort by load
     buckets.retain(|b| !b.slices.is_empty());
-    buckets.sort_by(|a, b| a.load_intensity.partial_cmp(&b.load_intensity).unwrap());
+    buckets.sort_by(|a, b| a.load_intensity.total_cmp(&b.load_intensity));
 
     let all_surfaces: Vec<ThroughputSurface> = buckets
         .iter()

@@ -54,10 +54,8 @@ pub fn suitable_regions(surfaces: &[ThroughputSurface], cfg: &RegionConfig) -> V
     if surfaces.is_empty() {
         return out;
     }
-    let xs = &surfaces[0].fitted.surface.xs;
-    let ys = &surfaces[0].fitted.surface.ys;
-    let (plo, phi) = (xs[0], *xs.last().unwrap());
-    let (clo, chi) = (ys[0], *ys.last().unwrap());
+    let (plo, phi) = surfaces[0].fitted.surface.p_range();
+    let (clo, chi) = surfaces[0].fitted.surface.cc_range();
 
     let mut push = |pt: SamplePoint| {
         if !out.iter().any(|q| q.params == pt.params) {
@@ -111,7 +109,7 @@ pub fn suitable_regions(surfaces: &[ThroughputSurface], cfg: &RegionConfig) -> V
             let best_slice = surfaces
                 .iter()
                 .zip(&vals)
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(s, _)| s.pp)
                 .unwrap_or(surfaces[0].pp);
             scored.push(SamplePoint {
@@ -124,7 +122,7 @@ pub fn suitable_regions(surfaces: &[ThroughputSurface], cfg: &RegionConfig) -> V
                 from_maxima: false,
             });
         }
-        scored.sort_by(|a, b| b.separation.partial_cmp(&a.separation).unwrap());
+        scored.sort_by(|a, b| b.separation.total_cmp(&a.separation));
         for pt in scored.into_iter().take(cfg.lambda) {
             push(pt);
         }

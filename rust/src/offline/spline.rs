@@ -69,7 +69,7 @@ impl Spline1D {
     /// Interval index for x (clamped to the domain).
     fn interval(&self, x: f64) -> usize {
         let n = self.xs.len();
-        match self.xs.binary_search_by(|k| k.partial_cmp(&x).unwrap()) {
+        match self.xs.binary_search_by(|k| k.total_cmp(&x)) {
             Ok(i) => i.min(n - 2),
             Err(i) => i.saturating_sub(1).min(n - 2),
         }
@@ -133,9 +133,27 @@ impl BicubicSurface {
         }
     }
 
+    /// Knot-domain extent along the first (p) axis.  `fit` asserts at
+    /// least two knots, so the degenerate arm only guards hand-built
+    /// surfaces.
+    pub fn p_range(&self) -> (f64, f64) {
+        match (self.xs.first(), self.xs.last()) {
+            (Some(&lo), Some(&hi)) => (lo, hi),
+            _ => (1.0, 1.0),
+        }
+    }
+
+    /// Knot-domain extent along the second (cc) axis.
+    pub fn cc_range(&self) -> (f64, f64) {
+        match (self.ys.first(), self.ys.last()) {
+            (Some(&lo), Some(&hi)) => (lo, hi),
+            _ => (1.0, 1.0),
+        }
+    }
+
     fn locate(knots: &[f64], x: f64) -> usize {
         let n = knots.len();
-        match knots.binary_search_by(|k| k.partial_cmp(&x).unwrap()) {
+        match knots.binary_search_by(|k| k.total_cmp(&x)) {
             Ok(i) => i.min(n - 2),
             Err(i) => i.saturating_sub(1).min(n - 2),
         }

@@ -94,8 +94,7 @@ where
                     if i >= n {
                         break;
                     }
-                    // A dropped receiver is impossible while the scope
-                    // lives; unwrap keeps worker panics loud.
+                    // pallas-lint: allow(panic-in-lib, a dropped receiver is impossible while the scope lives; the unwrap keeps worker panics loud instead of silently losing units)
                     tx.send((i, f(i, &items[i]))).unwrap();
                 }
             });
@@ -107,6 +106,7 @@ where
     });
     slots
         .into_iter()
+        // pallas-lint: allow(panic-in-lib, a missing slot means a worker died mid-unit; silent loss would corrupt the ordered reduction, so abort loudly)
         .map(|v| v.expect("pool worker dropped a unit"))
         .collect()
 }

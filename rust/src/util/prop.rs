@@ -118,6 +118,7 @@ pub fn run_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
                 .cloned()
                 .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".to_string());
+            // pallas-lint: allow(panic-in-lib, the property harness reports failures by panicking, mirroring assert! — swallowing the failure would make every property test pass vacuously)
             panic!(
                 "property '{name}' failed at case {case} (seed {seed:#x}, \
                  min failing size {:?}): {msg}",

@@ -1,0 +1,10 @@
+// R1 fixture: non-deterministic hash containers must be flagged.
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+fn build() -> HashMap<String, u32> {
+    let mut m = HashMap::new();
+    m.insert("a".to_string(), 1);
+    let _s: HashSet<u32> = HashSet::new();
+    m
+}

@@ -1,0 +1,11 @@
+// R1 fixture: ordered containers pass, and mentions inside strings or
+// comments (HashMap does not count here) are invisible to the lexer.
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+fn build() -> BTreeMap<String, u32> {
+    let mut m = BTreeMap::new();
+    m.insert("HashMap".to_string(), 1); // the string literal is stripped
+    let _s: BTreeSet<u32> = BTreeSet::new();
+    m
+}

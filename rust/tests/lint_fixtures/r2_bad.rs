@@ -1,0 +1,8 @@
+// R2 fixture: ad-hoc threading outside util::par must be flagged.
+fn fan_out() {
+    let h = std::thread::spawn(|| 42);
+    let _ = h.join();
+    std::thread::scope(|s| {
+        s.spawn(|| ());
+    });
+}

@@ -1,0 +1,6 @@
+// R2 fixture: going through the deterministic pool passes.
+use crate::util::par;
+
+fn fan_out(items: &[u32]) -> Vec<u32> {
+    par::par_map(items, |_, &x| x * 2)
+}

@@ -1,0 +1,8 @@
+// R3 fixture: wall-clock reads outside util::timer must be flagged.
+use std::time::Instant;
+
+fn measure() -> f64 {
+    let t0 = Instant::now();
+    let _ = std::time::SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,7 @@
+// R3 fixture: timing through the sanctioned wrapper passes.
+use crate::util::timer::time_once;
+
+fn measure() -> f64 {
+    let (_, t) = time_once(|| 1 + 1);
+    t.as_secs_f64()
+}

@@ -1,0 +1,6 @@
+// R4 fixture: OS-entropy randomness must be flagged.
+fn seed_state() -> u64 {
+    let mut rng = rand::thread_rng();
+    let _hasher = std::collections::hash_map::RandomState::new();
+    rng.gen()
+}

@@ -1,0 +1,8 @@
+// R4 fixture: the in-tree seeded generator passes — determinism comes
+// from explicit seeds, not from banning randomness altogether.
+use crate::util::rng::Rng;
+
+fn draw(seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    rng.next_u64()
+}

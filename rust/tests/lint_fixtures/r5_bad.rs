@@ -1,0 +1,9 @@
+// R5 fixture: panicking escape hatches in library code must be flagged.
+fn risky(v: Option<u32>, r: Result<u32, String>) -> u32 {
+    let a = v.unwrap();
+    let b = r.expect("always ok");
+    if a + b > 100 {
+        panic!("overflow");
+    }
+    todo!()
+}

@@ -1,0 +1,17 @@
+// R5 fixture: the non-panicking combinators pass, including the
+// unwrap_or family whose names merely contain "unwrap".
+fn safe(v: Option<u32>, r: Result<u32, String>) -> u32 {
+    let a = v.unwrap_or(0);
+    let b = r.unwrap_or_else(|_| 1);
+    let c = v.unwrap_or_default();
+    a + b + c
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

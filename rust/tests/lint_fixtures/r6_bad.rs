@@ -1,0 +1,7 @@
+// R6 fixture (scanned under a virtual src/faults/ path): fault code
+// reaching into simulator state directly must be flagged.
+use crate::sim::engine::step_once;
+
+fn sabotage(profile: &mut NetProfile) {
+    profile.rtt_ms = 9000.0;
+}

@@ -1,0 +1,7 @@
+// R6 fixture (scanned under a virtual src/faults/ path): faults that
+// stay inside the injection API pass.
+use crate::faults::api::FaultHook;
+
+fn degrade(hook: &mut dyn FaultHook) {
+    hook.scale_bandwidth(0.25);
+}

@@ -1,0 +1,11 @@
+// Suppression fixture: a reasonless directive is itself a violation and
+// suppresses nothing; an unknown rule id is also flagged.
+fn unjustified(v: Option<u32>) -> u32 {
+    // pallas-lint: allow(panic-in-lib)
+    v.unwrap()
+}
+
+fn misspelled(v: Option<u32>) -> u32 {
+    // pallas-lint: allow(panics-in-lib, the rule id has a typo)
+    v.unwrap()
+}

@@ -1,0 +1,10 @@
+// Suppression fixture: a directive with a rule id and a reason silences
+// the violation on its own line and the next one.
+fn checked(v: Option<u32>) -> u32 {
+    // pallas-lint: allow(panic-in-lib, fixture demonstrating a justified escape hatch)
+    v.unwrap()
+}
+
+fn inline(v: Option<u32>) -> u32 {
+    v.unwrap() // pallas-lint: allow(panic-in-lib, same-line form also counts)
+}

@@ -1,0 +1,162 @@
+//! Integration tests for `pallas-lint`: every rule against its
+//! good/bad fixture pair in `tests/lint_fixtures/`, the suppression
+//! semantics, the exemption paths, and a self-run proving the crate's
+//! own `src/` tree is clean against the checked-in baseline.
+
+use std::path::Path;
+
+use twophase::analysis::{baseline, scan_source, scan_tree, Violation};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+/// Scan a fixture under a virtual crate-relative path (exemptions and
+/// the R6 scope are keyed on the path, not the file location).
+fn scan_fixture(name: &str, virtual_path: &str) -> Vec<Violation> {
+    scan_source(virtual_path, &fixture(name))
+}
+
+fn rules_of(vs: &[Violation]) -> Vec<&str> {
+    vs.iter().map(|v| v.rule).collect()
+}
+
+#[test]
+fn r1_flags_hash_containers_and_passes_ordered_ones() {
+    let bad = scan_fixture("r1_bad.rs", "src/demo.rs");
+    assert!(
+        bad.iter().filter(|v| v.rule == "nondet-iteration").count() >= 2,
+        "{bad:?}"
+    );
+    let good = scan_fixture("r1_good.rs", "src/demo.rs");
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn r2_flags_ad_hoc_threads_except_in_par() {
+    let bad = scan_fixture("r2_bad.rs", "src/demo.rs");
+    assert!(
+        bad.iter().filter(|v| v.rule == "ad-hoc-thread").count() >= 2,
+        "{bad:?}"
+    );
+    // the same source is exempt inside the pool implementation
+    let exempt = scan_fixture("r2_bad.rs", "src/util/par.rs");
+    assert!(
+        exempt.iter().all(|v| v.rule != "ad-hoc-thread"),
+        "{exempt:?}"
+    );
+    let good = scan_fixture("r2_good.rs", "src/demo.rs");
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn r3_flags_clocks_except_in_timer() {
+    let bad = scan_fixture("r3_bad.rs", "src/demo.rs");
+    assert!(
+        bad.iter().filter(|v| v.rule == "ad-hoc-clock").count() >= 2,
+        "{bad:?}"
+    );
+    let exempt = scan_fixture("r3_bad.rs", "src/util/timer.rs");
+    assert!(exempt.iter().all(|v| v.rule != "ad-hoc-clock"), "{exempt:?}");
+    let good = scan_fixture("r3_good.rs", "src/demo.rs");
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn r4_flags_os_entropy_but_not_seeded_rng() {
+    let bad = scan_fixture("r4_bad.rs", "src/demo.rs");
+    assert!(
+        bad.iter().filter(|v| v.rule == "ad-hoc-entropy").count() >= 2,
+        "{bad:?}"
+    );
+    let exempt = scan_fixture("r4_bad.rs", "src/util/rng.rs");
+    assert!(
+        exempt.iter().all(|v| v.rule != "ad-hoc-entropy"),
+        "{exempt:?}"
+    );
+    let good = scan_fixture("r4_good.rs", "src/demo.rs");
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn r5_flags_panics_but_not_unwrap_or_family_or_tests_or_bins() {
+    let bad = scan_fixture("r5_bad.rs", "src/demo.rs");
+    assert!(
+        bad.iter().filter(|v| v.rule == "panic-in-lib").count() >= 4,
+        "{bad:?}"
+    );
+    // entrypoints may panic
+    let in_bin = scan_fixture("r5_bad.rs", "src/bin/tool.rs");
+    assert!(in_bin.iter().all(|v| v.rule != "panic-in-lib"), "{in_bin:?}");
+    let in_main = scan_fixture("r5_bad.rs", "src/main.rs");
+    assert!(
+        in_main.iter().all(|v| v.rule != "panic-in-lib"),
+        "{in_main:?}"
+    );
+    // unwrap_or / unwrap_or_else / unwrap_or_default and #[cfg(test)]
+    // bodies are all fine
+    let good = scan_fixture("r5_good.rs", "src/demo.rs");
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn r6_flags_sim_state_mutation_only_under_faults() {
+    let bad = scan_fixture("r6_bad.rs", "src/faults/bad.rs");
+    assert!(rules_of(&bad).contains(&"fault-hook-bypass"), "{bad:?}");
+    // identical source outside src/faults/ is out of the rule's scope
+    let elsewhere = scan_fixture("r6_bad.rs", "src/sim/engine.rs");
+    assert!(
+        elsewhere.iter().all(|v| v.rule != "fault-hook-bypass"),
+        "{elsewhere:?}"
+    );
+    let good = scan_fixture("r6_good.rs", "src/faults/good.rs");
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn valid_suppressions_silence_their_rule() {
+    let vs = scan_fixture("suppression_good.rs", "src/demo.rs");
+    assert!(vs.is_empty(), "{vs:?}");
+}
+
+#[test]
+fn bad_suppressions_are_flagged_and_inert() {
+    let vs = scan_fixture("suppression_bad.rs", "src/demo.rs");
+    let rules = rules_of(&vs);
+    // each of the two functions yields the un-suppressed violation plus
+    // the bad-suppression report
+    assert_eq!(
+        rules.iter().filter(|r| **r == "bad-suppression").count(),
+        2,
+        "{vs:?}"
+    );
+    assert_eq!(
+        rules.iter().filter(|r| **r == "panic-in-lib").count(),
+        2,
+        "{vs:?}"
+    );
+}
+
+/// The ratchet: the crate's own tree must be clean against the
+/// checked-in baseline — no new violations AND no stale entries.
+#[test]
+fn self_scan_is_clean_against_baseline() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let violations = scan_tree(&root.join("src")).expect("scan src tree");
+    let text = std::fs::read_to_string(root.join("lint-baseline.txt"))
+        .expect("read lint-baseline.txt");
+    let base = baseline::parse(&text).expect("parse baseline");
+    let cmp = baseline::compare(&base, &violations);
+    assert!(
+        cmp.clean(),
+        "lint drift: over = {:?}, stale = {:?}",
+        cmp.over
+            .iter()
+            .map(|(d, vs)| format!("{}:{} ({} > {}): {vs:?}", d.path, d.rule, d.actual, d.allowed))
+            .collect::<Vec<_>>(),
+        cmp.stale
+    );
+}

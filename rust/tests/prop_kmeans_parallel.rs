@@ -1,0 +1,67 @@
+//! Thread-invariance of the parallelized K-means++ D² refresh: the
+//! seeding and the full Lloyd run must produce bit-identical centroids
+//! for any worker count.  Kept as the single test in this binary
+//! because it mutates the process-global `PALLAS_THREADS`.
+
+use twophase::offline::features::N_FEATURES;
+use twophase::offline::kmeans::{kmeans, kmeanspp_init, NativeKmeans};
+use twophase::util::rng::Rng;
+
+/// FNV-1a over the exact bit patterns of a centroid set.
+fn digest(centroids: &[[f64; N_FEATURES]]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for c in centroids {
+        for v in c {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+    }
+    h
+}
+
+fn blobs(n: usize, seed: u64) -> Vec<[f64; N_FEATURES]> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let center = (i % 5) as f64 * 10.0;
+            let mut p = [0.0; N_FEATURES];
+            for v in &mut p {
+                *v = center + rng.normal();
+            }
+            p
+        })
+        .collect()
+}
+
+#[test]
+fn kmeanspp_digest_is_thread_invariant() {
+    // > KPP_CHUNK points so the refresh actually spans several chunks
+    let points = blobs(3000, 0x5eed);
+    let orig = std::env::var("PALLAS_THREADS").ok();
+
+    let mut digests: Vec<(String, u64, u64)> = Vec::new();
+    for threads in ["1", "2", "8"] {
+        std::env::set_var("PALLAS_THREADS", threads);
+        let init = kmeanspp_init(&points, 5, &mut Rng::new(42));
+        let full = kmeans(&points, 5, &mut Rng::new(42), &NativeKmeans);
+        digests.push((threads.to_string(), digest(&init), digest(&full.centroids)));
+    }
+    match orig {
+        Some(v) => std::env::set_var("PALLAS_THREADS", v),
+        None => std::env::remove_var("PALLAS_THREADS"),
+    }
+
+    let (_, init0, full0) = digests[0].clone();
+    for (threads, init, full) in &digests[1..] {
+        assert_eq!(
+            *init, init0,
+            "kmeanspp_init digest diverged at {threads} threads"
+        );
+        assert_eq!(
+            *full, full0,
+            "kmeans centroid digest diverged at {threads} threads"
+        );
+    }
+}

@@ -13,6 +13,10 @@ cargo build --release
 cargo test -q
 cargo clippy -- -D warnings
 
+# determinism & robustness lint: fails on violations not covered by
+# rust/lint-baseline.txt AND on stale baseline entries (ratchet)
+cargo run --release --bin pallas-lint -- --baseline
+
 # second tier-1 pass under a fixed 2-worker pool: the deterministic
 # thread pool must be bit-identical to serial, so nothing may change
 PALLAS_THREADS=2 cargo test -q
