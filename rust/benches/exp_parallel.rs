@@ -79,6 +79,8 @@ fn main() {
         },
     )
     .expect("bench corpus yields a non-empty knowledge base");
+    let tracer = Arc::new(twophase::util::trace::Tracer::new());
+    orch.set_tracer(Some(Arc::clone(&tracer)));
     let mut warm_samples = 0usize;
     for round in 0..2usize {
         for rep in 0..reps {
@@ -96,6 +98,7 @@ fn main() {
             }
         }
     }
+    orch.set_tracer(None);
     let stats = orch.cache_stats();
     println!(
         "[bench] tuning cache over {} transfers: {} hits / {} misses \
@@ -105,6 +108,14 @@ fn main() {
         stats.misses,
         stats.hit_rate() * 100.0
     );
+    let m = tracer.metrics();
+    assert_eq!(
+        m.counter("cache.hits"),
+        stats.hits,
+        "trace cache counters must agree with the cache's own stats"
+    );
+    assert_eq!(m.counter("cache.misses"), stats.misses);
+    println!("[bench] {}", tracer.summary());
 
     let out = Value::obj(vec![
         ("bench", Value::str("exp_parallel")),

@@ -1,15 +1,36 @@
 //! Regenerates the fault-injection robustness sweep: recovered
 //! throughput fraction vs fault intensity, two-phase (ASM) against the
-//! GO/SC/HARP static baselines.  `harness = false`.
+//! GO/SC/HARP static baselines.  Attaches a deterministic trace
+//! collector to the shared orchestrator and prints its summary plus
+//! the recovery-path counters it gathered.  `harness = false`.
+
+use std::sync::Arc;
+
+use twophase::experiments::common::ctx;
+use twophase::util::trace::Tracer;
 
 fn main() {
+    let tracer = Arc::new(Tracer::new());
+    ctx().orchestrator.set_tracer(Some(Arc::clone(&tracer)));
     let (res, elapsed) = twophase::util::timer::time_once(|| {
         twophase::experiments::robustness::run()
     });
+    ctx().orchestrator.set_tracer(None);
     let levels = twophase::experiments::robustness::INTENSITIES.len();
     println!(
         "[bench] exp_robustness completed in {elapsed:?} (ASM wins {}/{} levels)",
         res.asm_win_levels(),
         levels
+    );
+    let m = tracer.metrics();
+    println!(
+        "[bench] {}; chunks={} stalls={} retries={} resumed={} requeries={} fault-transitions={}",
+        tracer.summary(),
+        m.counter("chunks"),
+        m.counter("chunk.stalls"),
+        m.counter("retries"),
+        m.counter("chunks.resumed"),
+        m.counter("asm.requeries"),
+        m.counter("fault.transitions"),
     );
 }

@@ -31,6 +31,14 @@ pub trait Optimizer {
     fn cache_entry(&self) -> Option<crate::offline::cache::CachedTuning> {
         None
     }
+
+    /// Drain trace events minted since the last call (sampling steps,
+    /// convergence, alarm transitions, re-tunes).  The model has no
+    /// clock; the engine stamps the events with the sim time of the
+    /// chunk that produced them.  Baselines trace nothing.
+    fn drain_trace(&mut self) -> Vec<crate::util::trace::PendingEvent> {
+        Vec::new()
+    }
 }
 
 /// Identifier for the seven evaluated models (drives the Fig 5 matrix).
@@ -129,6 +137,10 @@ impl Optimizer for AsmOptimizer {
             predicted_mbps: self.tuner.predicted(),
             bucket: self.tuner.asm().current_bucket(),
         })
+    }
+
+    fn drain_trace(&mut self) -> Vec<crate::util::trace::PendingEvent> {
+        self.tuner.drain_trace()
     }
 }
 

@@ -40,6 +40,9 @@ pub struct TransferReport {
     /// recorded miss, `None` means the cache was not consulted
     /// (disabled, or a non-ASM model)
     pub cache_hit: Option<bool>,
+    /// chunks that recorded zero throughput (endpoint stalls under
+    /// fault injection); excluded from `steady_throughput_mbps`
+    pub stalled_chunks: usize,
 }
 
 impl TransferReport {
@@ -50,19 +53,40 @@ impl TransferReport {
         predicted: Option<f64>,
         sample_transfers: usize,
     ) -> TransferReport {
-        // steady phase = samples after the last parameter change within
-        // the first quarter of chunks (the sampling head), or all if no
-        // changes happened
-        let head = sample_transfers.min(outcome.samples.len());
-        let steady: &[_] = &outcome.samples[head..];
-        let steady = if steady.is_empty() {
-            &outcome.samples[..]
+        // steady phase = samples after the LAST parameter change in the
+        // whole outcome (a fault-recovery re-tune past the sampling
+        // head moves the steady boundary with it), and never earlier
+        // than the sampling head itself
+        let n = outcome.samples.len();
+        let head = sample_transfers.min(n);
+        let last_change = outcome
+            .samples
+            .windows(2)
+            .rposition(|w| w[0].params != w[1].params)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let start = head.max(last_change);
+        let steady: &[_] = if start < n {
+            &outcome.samples[start..]
         } else {
-            steady
+            // degenerate outcome (all chunks consumed by tuning): fall
+            // back to everything after the last change
+            &outcome.samples[last_change..]
         };
-        let (mb, secs) = steady.iter().fold((0.0, 0.0), |(mb, s), c| {
-            (mb + c.chunk_mb, s + c.chunk_mb * 8.0 / c.throughput_mbps)
-        });
+        // volume-weighted harmonic mean over non-stalled chunks; a
+        // stalled chunk (0 throughput) would contribute infinite
+        // seconds and collapse the estimate, so it is counted apart
+        let stalled_chunks = outcome
+            .samples
+            .iter()
+            .filter(|c| c.throughput_mbps <= 0.0)
+            .count();
+        let (mb, secs) = steady
+            .iter()
+            .filter(|c| c.throughput_mbps > 0.0)
+            .fold((0.0, 0.0), |(mb, s), c| {
+                (mb + c.chunk_mb, s + c.chunk_mb * 8.0 / c.throughput_mbps)
+            });
         let steady_th = if secs > 0.0 { mb * 8.0 / secs } else { 0.0 };
         let avg = outcome.avg_throughput_mbps();
         TransferReport {
@@ -82,6 +106,7 @@ impl TransferReport {
                 .unwrap_or(Params::DEFAULT),
             steady_throughput_mbps: steady_th,
             cache_hit: None,
+            stalled_chunks,
         }
     }
 }
@@ -135,5 +160,96 @@ mod tests {
         let r = TransferReport::from_outcome("GO", "xsede", &outcome(), None, 0);
         assert!((r.avg_throughput_mbps - 3_000.0 * 8.0 / 60.0).abs() < 1e-9);
         assert!(r.accuracy_pct.is_none());
+        assert_eq!(r.stalled_chunks, 0);
+    }
+
+    #[test]
+    fn post_head_retune_moves_steady_boundary() {
+        // fault-recovery path: the ASM re-tunes at chunk 4, well past
+        // the sampling head of 2.  The steady phase must start at the
+        // last parameter change (chunk 4), not at the head — the old
+        // head-only slicing mixed the pre-re-tune 800s into the
+        // post-re-tune 300 steady state.
+        let mk = |t, th, mb, params| ChunkSample {
+            t_s: t,
+            params,
+            throughput_mbps: th,
+            chunk_mb: mb,
+            penalty_s: 0.0,
+        };
+        let o = TransferOutcome {
+            total_mb: 4_000.0,
+            duration_s: 90.0,
+            samples: vec![
+                mk(10.0, 100.0, 500.0, Params::new(2, 2, 2)),
+                mk(20.0, 400.0, 500.0, Params::new(8, 4, 8)),
+                mk(35.0, 800.0, 1_000.0, Params::new(8, 4, 8)),
+                mk(50.0, 800.0, 1_000.0, Params::new(8, 4, 8)),
+                mk(70.0, 300.0, 500.0, Params::new(4, 2, 4)), // re-tune
+                mk(90.0, 300.0, 500.0, Params::new(4, 2, 4)),
+            ],
+        };
+        let r = TransferReport::from_outcome("ASM", "xsede", &o, Some(300.0), 2);
+        assert!(
+            (r.steady_throughput_mbps - 300.0).abs() < 1e-9,
+            "steady must cover only the post-re-tune chunks, got {}",
+            r.steady_throughput_mbps
+        );
+        assert!((r.accuracy_pct.unwrap() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stalled_chunks_do_not_collapse_steady_throughput() {
+        // a stalled chunk (0 throughput under fault injection) used to
+        // contribute infinite seconds, driving steady throughput and
+        // accuracy to 0
+        let mk = |t, th, mb| ChunkSample {
+            t_s: t,
+            params: Params::new(8, 4, 8),
+            throughput_mbps: th,
+            chunk_mb: mb,
+            penalty_s: 0.0,
+        };
+        let o = TransferOutcome {
+            total_mb: 1_500.0,
+            duration_s: 40.0,
+            samples: vec![
+                mk(10.0, 500.0, 500.0),
+                mk(25.0, 0.0, 500.0), // endpoint stall
+                mk(40.0, 500.0, 500.0),
+            ],
+        };
+        let r = TransferReport::from_outcome("ASM", "xsede", &o, Some(500.0), 0);
+        assert_eq!(r.stalled_chunks, 1);
+        assert!(
+            (r.steady_throughput_mbps - 500.0).abs() < 1e-9,
+            "stalled chunk must be excluded, got {}",
+            r.steady_throughput_mbps
+        );
+        assert!((r.accuracy_pct.unwrap() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_tuning_outcome_falls_back_past_last_change() {
+        // every chunk consumed by tuning (head == len): steady falls
+        // back to the slice after the last change rather than panicking
+        // or averaging pre-convergence noise
+        let mk = |t, th, params| ChunkSample {
+            t_s: t,
+            params,
+            throughput_mbps: th,
+            chunk_mb: 500.0,
+            penalty_s: 0.0,
+        };
+        let o = TransferOutcome {
+            total_mb: 1_000.0,
+            duration_s: 30.0,
+            samples: vec![
+                mk(10.0, 100.0, Params::new(2, 2, 2)),
+                mk(30.0, 400.0, Params::new(8, 4, 8)),
+            ],
+        };
+        let r = TransferReport::from_outcome("ASM", "xsede", &o, Some(400.0), 2);
+        assert!((r.steady_throughput_mbps - 400.0).abs() < 1e-9);
     }
 }

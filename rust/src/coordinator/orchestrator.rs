@@ -20,9 +20,23 @@ use crate::offline::pipeline::KnowledgeBase;
 use crate::online::controller::{DynamicTuner, TunerConfig};
 use crate::sim::dataset::Dataset;
 use crate::sim::engine::{ChunkFault, ChunkSample, SimEnv, TransferOutcome};
+use crate::faults::FaultState;
 use crate::sim::profile::NetProfile;
 use crate::util::err::Result;
+use crate::util::json::Value;
+use crate::util::trace::Tracer;
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+
+/// Trace fields for a [`FaultState`] snapshot.
+fn fault_state_fields(s: &FaultState) -> Vec<(&'static str, Value)> {
+    vec![
+        ("capacity_factor", Value::Num(s.capacity_factor)),
+        ("extra_loss", Value::Num(s.extra_loss)),
+        ("rtt_factor", Value::Num(s.rtt_factor)),
+        ("extra_bg_streams", Value::Num(s.extra_bg_streams)),
+        ("stalled", Value::Bool(s.stalled_until_s.is_some())),
+    ]
+}
 
 /// One transfer job.
 #[derive(Debug, Clone)]
@@ -101,6 +115,9 @@ pub struct Orchestrator {
     /// historical tuning cache (Mutex keeps the orchestrator usable
     /// from `run_batch`'s worker threads)
     cache: Mutex<TuningCache>,
+    /// optional trace collector; `None` (the default) keeps every
+    /// transfer untraced with zero overhead in the chunk loop
+    tracer: Mutex<Option<Arc<Tracer>>>,
 }
 
 impl Orchestrator {
@@ -125,7 +142,20 @@ impl Orchestrator {
             annot_model,
             cfg,
             cache,
+            tracer: Mutex::new(None),
         })
+    }
+
+    /// Attach (or detach, with `None`) a trace collector.  Every
+    /// subsequent transfer opens a [`crate::util::trace::TraceScope`]
+    /// keyed by its request id and records its full lifecycle; see
+    /// `util::trace` for the determinism contract.
+    pub fn set_tracer(&self, tracer: Option<Arc<Tracer>>) {
+        *self.tracer.lock().unwrap_or_else(|e| e.into_inner()) = tracer;
+    }
+
+    fn tracer(&self) -> Option<Arc<Tracer>> {
+        self.tracer.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     fn cache_enabled(&self) -> bool {
@@ -253,9 +283,27 @@ impl Orchestrator {
         if let Some(plan) = fault_plan {
             env = env.with_faults(plan);
         }
+        let tracer = self.tracer();
+        let mut scope = Tracer::scope_opt(tracer.as_ref(), req.id);
         let (mut optimizer, cache_hit) = self.build_optimizer_cached(req);
+        if let Some(hit) = cache_hit {
+            scope.event(
+                "cache.consult",
+                0.0,
+                vec![
+                    ("hit", Value::Bool(hit)),
+                    ("capacity", Value::Num(self.cfg.cache_capacity as f64)),
+                ],
+            );
+            scope.count(if hit { "cache.hits" } else { "cache.misses" }, 1);
+        }
         let mut state = TransferState::Queued;
         state.transition(TransferState::Sampling);
+        scope.event(
+            "state",
+            0.0,
+            vec![("to", Value::str(state.label()))],
+        );
 
         let expected = req.profile.bandwidth_mbps / 4.0;
         let plan = plan_chunks(&req.profile, &req.dataset, expected, &self.cfg.scheduler);
@@ -272,10 +320,27 @@ impl Orchestrator {
         let mut retries = 0usize;
         let mut backoff_total_s = 0.0f64;
         let mut resumed_chunks = 0usize;
+        let mut last_fault = env.fault_state();
 
         while remaining > 1e-9 {
             if idx == self.cfg.sampling_chunks && state == TransferState::Sampling {
                 state.transition(TransferState::Streaming);
+                scope.event(
+                    "state",
+                    env.now_s - start,
+                    vec![("to", Value::str(state.label()))],
+                );
+            }
+            // fault-condition transition (injection onset or expiry)
+            let fault_now = env.fault_state();
+            if fault_now != last_fault {
+                scope.event(
+                    "fault.state",
+                    env.now_s - start,
+                    fault_state_fields(&fault_now),
+                );
+                scope.count("fault.transitions", 1);
+                last_fault = fault_now;
             }
             let chunk_mb = if idx < self.cfg.sampling_chunks {
                 plan.sample_chunk_mb.min(remaining)
@@ -288,6 +353,10 @@ impl Orchestrator {
             let params = optimizer
                 .next_params(last_th)
                 .clamp(req.profile.max_param);
+            // stamp the tuner's clock-less decision events (sampling
+            // steps, convergence, alarms, re-tunes) with the decision
+            // time
+            scope.stamp(env.now_s - start, optimizer.drain_trace());
 
             // retry-with-backoff loop: the chunk (and the bytes behind
             // it) is the checkpoint unit
@@ -296,13 +365,37 @@ impl Orchestrator {
                 match env.try_transfer_chunk(params, &chunk, prev_params) {
                     Ok(ok) => break Some(ok),
                     Err(ChunkFault::EndpointStall { .. }) => {
+                        scope.event(
+                            "chunk.stall",
+                            env.now_s - start,
+                            vec![
+                                ("chunk", Value::Num(idx as f64)),
+                                ("attempt", Value::Num(attempt as f64)),
+                            ],
+                        );
+                        scope.count("chunk.stalls", 1);
                         if state != TransferState::Recovering {
                             state.transition(TransferState::Recovering);
+                            scope.event(
+                                "state",
+                                env.now_s - start,
+                                vec![("to", Value::str(state.label()))],
+                            );
                         }
                         if attempt >= retry.max_attempts {
                             break None;
                         }
                         let wait = retry.backoff_s(attempt);
+                        scope.event(
+                            "retry.backoff",
+                            env.now_s - start,
+                            vec![
+                                ("chunk", Value::Num(idx as f64)),
+                                ("attempt", Value::Num(attempt as f64)),
+                                ("wait_s", Value::Num(wait)),
+                            ],
+                        );
+                        scope.observe("retry.backoff_s", wait);
                         env.now_s += wait;
                         backoff_total_s += wait;
                         retries += 1;
@@ -312,6 +405,15 @@ impl Orchestrator {
             };
             let Some((th, _dur)) = attempt_result else {
                 state.transition(TransferState::Failed);
+                scope.event(
+                    "transfer.failed",
+                    env.now_s - start,
+                    vec![
+                        ("chunk", Value::Num(idx as f64)),
+                        ("attempts", Value::Num(attempt as f64)),
+                        ("remaining_mb", Value::Num(remaining)),
+                    ],
+                );
                 break;
             };
             let recovered = state == TransferState::Recovering;
@@ -322,6 +424,15 @@ impl Orchestrator {
                 } else {
                     TransferState::Streaming
                 });
+                scope.event(
+                    "chunk.resumed",
+                    env.now_s - start,
+                    vec![
+                        ("chunk", Value::Num(idx as f64)),
+                        ("to", Value::str(state.label())),
+                    ],
+                );
+                scope.count("chunks.resumed", 1);
             }
             samples.push(ChunkSample {
                 t_s: env.now_s - start,
@@ -332,6 +443,8 @@ impl Orchestrator {
                     .map(|q| env.model.param_change_penalty_s(q, params))
                     .unwrap_or(0.0),
             });
+            scope.count("chunks", 1);
+            scope.observe("chunk.throughput_mbps", th);
             remaining -= chunk_mb;
             transferred += chunk_mb;
             if recovered && req.model == OptimizerKind::Asm {
@@ -339,6 +452,12 @@ impl Orchestrator {
                 // restart the ASM bisection on current conditions
                 optimizer = self.build_optimizer(req);
                 last_th = None;
+                scope.event(
+                    "asm.requery",
+                    env.now_s - start,
+                    vec![("chunk", Value::Num(idx as f64))],
+                );
+                scope.count("asm.requeries", 1);
             } else {
                 last_th = Some(th);
             }
@@ -353,6 +472,22 @@ impl Orchestrator {
             }
             state.transition(TransferState::Done);
         }
+        // catch decision events minted by the last `next_params` of a
+        // failed run (a completed run has already drained everything)
+        scope.stamp(env.now_s - start, optimizer.drain_trace());
+        scope.event(
+            "state",
+            env.now_s - start,
+            vec![("to", Value::str(state.label()))],
+        );
+        scope.count(
+            if completed {
+                "transfers.completed"
+            } else {
+                "transfers.failed"
+            },
+            1,
+        );
 
         // memoize the converged operating point for future requests
         // with the same (network, dataset) fingerprint
@@ -364,7 +499,19 @@ impl Orchestrator {
                     req.dataset.avg_file_mb,
                     req.dataset.n_files,
                 );
-                self.lock_cache().put(fp, entry);
+                let evicted = {
+                    let mut cache = self.lock_cache();
+                    let before = cache.stats().evictions;
+                    cache.put(fp, entry);
+                    cache.stats().evictions - before
+                };
+                scope.event(
+                    "cache.memoize",
+                    env.now_s - start,
+                    vec![("evicted", Value::Num(evicted as f64))],
+                );
+                scope.count("cache.memoizations", 1);
+                scope.count("cache.evictions", evicted);
             }
         }
 
@@ -381,6 +528,29 @@ impl Orchestrator {
             optimizer.samples_used().min(self.cfg.sampling_chunks),
         );
         report.cache_hit = cache_hit;
+        let mut span_fields = vec![
+            ("model", Value::str(report.model.clone())),
+            ("network", Value::str(report.network.clone())),
+            ("completed", Value::Bool(completed)),
+            ("total_mb", Value::Num(report.total_mb)),
+            ("avg_mbps", Value::Num(report.avg_throughput_mbps)),
+            ("steady_mbps", Value::Num(report.steady_throughput_mbps)),
+            ("param_changes", Value::Num(report.param_changes as f64)),
+            ("sample_transfers", Value::Num(report.sample_transfers as f64)),
+            ("stalled_chunks", Value::Num(report.stalled_chunks as f64)),
+            ("retries", Value::Num(retries as f64)),
+            ("backoff_total_s", Value::Num(backoff_total_s)),
+        ];
+        if let Some(acc) = report.accuracy_pct {
+            span_fields.push(("accuracy_pct", Value::Num(acc)));
+        }
+        scope.span("transfer", 0.0, outcome.duration_s, span_fields);
+        scope.count("retries", retries as u64);
+        scope.observe("transfer.duration_s", outcome.duration_s);
+        if report.steady_throughput_mbps > 0.0 {
+            scope.observe("steady.throughput_mbps", report.steady_throughput_mbps);
+        }
+        drop(scope); // flush into the tracer at a single point
         RecoveryReport {
             report,
             retries,

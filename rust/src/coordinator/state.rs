@@ -57,6 +57,19 @@ impl TransferState {
     pub fn is_terminal(self) -> bool {
         matches!(self, TransferState::Done | TransferState::Failed)
     }
+
+    /// Stable lowercase name (trace records, reports).
+    pub fn label(self) -> &'static str {
+        match self {
+            TransferState::Queued => "queued",
+            TransferState::Sampling => "sampling",
+            TransferState::Streaming => "streaming",
+            TransferState::Retuning => "retuning",
+            TransferState::Recovering => "recovering",
+            TransferState::Done => "done",
+            TransferState::Failed => "failed",
+        }
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +114,13 @@ mod tests {
         s.transition(Recovering);
         s.transition(Failed);
         assert!(s.is_terminal());
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Queued.label(), "queued");
+        assert_eq!(Recovering.label(), "recovering");
+        assert_eq!(Failed.label(), "failed");
     }
 
     #[test]

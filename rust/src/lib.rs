@@ -10,7 +10,9 @@
 //!   [`util::par`]: a deterministic scoped thread pool whose ordered
 //!   reduction keeps every parallel result bit-identical to serial —
 //!   `PALLAS_THREADS` overrides the worker count, `=1` is the serial
-//!   path);
+//!   path — and [`util::trace`]: a deterministic sim-time tracing +
+//!   metrics layer whose JSONL export is byte-identical at any thread
+//!   count);
 //! * [`sim`] — the testbed substrate: a mechanistic wide-area transfer
 //!   simulator (TCP streams, endpoints, background traffic, shared
 //!   bottleneck links) standing in for XSEDE / DIDCLAB / Chameleon;
@@ -46,6 +48,21 @@
 //!   fault-hook discipline), with inline suppressions and a ratcheting
 //!   baseline — run via `cargo run --bin pallas-lint`, gated in
 //!   `scripts/ci.sh`.
+//!
+//! # Observability
+//!
+//! [`util::trace`] threads a deterministic trace through the transfer
+//! lifecycle: `Orchestrator::set_tracer` attaches a collector, and
+//! every transfer then records a per-request span plus events for
+//! sampling steps and ASM convergence, alarm-level transitions,
+//! fault-state changes, chunk stalls, backoff waits, cache verdicts
+//! and re-tunes, alongside a counter/gauge/histogram registry.  All
+//! timestamps are sim time (lint rule R3: no wall clocks), all keyed
+//! state is `BTreeMap` (R1), and records are exported in scope-key
+//! order with globally-assigned sequence numbers, so the JSONL dump is
+//! a pure function of seeds — `tests/prop_trace.rs` proves byte
+//! equality across `PALLAS_THREADS` ∈ {1, 2, 8}.  The CLI exposes it
+//! as `twophase transfer --trace <path>` and `twophase trace-schema`.
 //!
 //! # Fault model & recovery
 //!

@@ -8,7 +8,14 @@
 //!                    [--model asm|harp|annot|go|sp|sc|nmt|noopt] [--peak]
 //! twophase multiuser [--users 4] [--model asm] [--duration 600]
 //! twophase experiment <table1|fig1|fig4a|fig4b|fig5|fig6|fig7|fig8|fig9|robustness|all>
+//! twophase trace-schema <trace.jsonl> [--golden scripts/trace-schema.golden]
 //! ```
+//!
+//! `transfer` accepts `--trace <path>` to dump the deterministic
+//! sim-time trace of the run as JSONL (see `util::trace`);
+//! `trace-schema` prints a trace's schema (field names per record
+//! kind) and, with `--golden`, verifies it against a checked-in
+//! schema file (CI smoke).
 
 use std::sync::Arc;
 use twophase::bail;
@@ -39,6 +46,7 @@ fn main() {
         Some("transfer") => cmd_transfer(&args),
         Some("multiuser") => cmd_multiuser(&args),
         Some("experiment") => cmd_experiment(&args),
+        Some("trace-schema") => cmd_trace_schema(&args),
         _ => {
             print_usage();
             Ok(())
@@ -53,7 +61,7 @@ fn main() {
 fn print_usage() {
     println!(
         "twophase — Two-Phase Dynamic Throughput Optimization (Nine & Kosar 2018)\n\
-         subcommands: info | gen-logs | offline | transfer | multiuser | experiment\n\
+         subcommands: info | gen-logs | offline | transfer | multiuser | experiment | trace-schema\n\
          run with no flags for defaults; see README.md for details"
     );
 }
@@ -198,21 +206,55 @@ fn cmd_transfer(args: &Args) -> Result<()> {
             experiments::common::OFFPEAK_PHASE_S
         },
     };
+    let tracer = args
+        .get("trace")
+        .map(|_| Arc::new(twophase::util::trace::Tracer::new()));
+    if let Some(t) = &tracer {
+        orch.set_tracer(Some(Arc::clone(t)));
+    }
     let r = orch.execute(&req);
     println!(
         "model={} network={} total={:.0} MB duration={:.1}s",
         r.model, r.network, r.total_mb, r.duration_s
     );
     println!(
-        "avg={:.1} Mbps steady={:.1} Mbps samples={} param-changes={} final={}",
+        "avg={:.1} Mbps steady={:.1} Mbps samples={} param-changes={} stalled={} final={}",
         r.avg_throughput_mbps,
         r.steady_throughput_mbps,
         r.sample_transfers,
         r.param_changes,
+        r.stalled_chunks,
         r.final_params
     );
     if let (Some(pred), Some(acc)) = (r.predicted_mbps, r.accuracy_pct) {
         println!("predicted={pred:.1} Mbps accuracy={acc:.1}%");
+    }
+    if let (Some(tracer), Some(path)) = (tracer, args.get("trace")) {
+        tracer.write_jsonl(path)?;
+        println!("{} -> {path}", tracer.summary());
+    }
+    Ok(())
+}
+
+fn cmd_trace_schema(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .context("usage: twophase trace-schema <trace.jsonl> [--golden <schema file>]")?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let schema = twophase::util::trace::schema_of_jsonl(&text)
+        .with_context(|| format!("parsing {path}"))?;
+    match args.get("golden") {
+        None => print!("{schema}"),
+        Some(golden_path) => {
+            let golden = std::fs::read_to_string(golden_path)
+                .with_context(|| format!("reading {golden_path}"))?;
+            if schema != golden {
+                eprintln!("--- expected ({golden_path})\n{golden}--- actual ({path})\n{schema}");
+                bail!("trace schema drifted from {golden_path}");
+            }
+            println!("trace schema matches {golden_path}");
+        }
     }
     Ok(())
 }

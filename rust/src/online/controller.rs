@@ -11,9 +11,19 @@
 use crate::offline::cache::CachedTuning;
 use crate::offline::pipeline::SurfaceSet;
 use crate::online::asm::{Asm, AsmPhase};
-use crate::online::monitor::DeviationMonitor;
+use crate::online::monitor::{AlarmLevel, DeviationMonitor};
 use crate::sim::multiuser::{UserCtx, UserPolicy};
+use crate::util::json::Value;
+use crate::util::trace::PendingEvent;
 use crate::Params;
+
+fn params_fields(p: Params) -> Vec<(&'static str, Value)> {
+    vec![
+        ("cc", Value::Num(p.cc as f64)),
+        ("p", Value::Num(p.p as f64)),
+        ("pp", Value::Num(p.pp as f64)),
+    ]
+}
 
 /// Tuning knobs for the streaming-phase monitor.
 #[derive(Debug, Clone)]
@@ -44,6 +54,12 @@ pub struct DynamicTuner {
     cfg: TunerConfig,
     /// how many times the streaming phase re-tuned
     pub retunes: usize,
+    /// trace events minted since the last [`DynamicTuner::drain_trace`];
+    /// the tuner has no clock, so the orchestrator stamps them with the
+    /// sim time of the chunk that produced them
+    pending: Vec<PendingEvent>,
+    /// last alarm level reported, so only *transitions* are traced
+    last_alarm: AlarmLevel,
 }
 
 impl DynamicTuner {
@@ -54,6 +70,8 @@ impl DynamicTuner {
             monitor,
             cfg,
             retunes: 0,
+            pending: Vec::new(),
+            last_alarm: AlarmLevel::Clear,
         }
     }
 
@@ -103,20 +121,63 @@ impl DynamicTuner {
     pub fn observe(&mut self, measured: f64) -> Params {
         match self.asm.phase() {
             AsmPhase::Sampling => {
+                let bucket_before = self.asm.current_bucket();
                 let d = self.asm.observe(measured);
+                let mut fields = vec![
+                    ("measured_mbps", Value::Num(measured)),
+                    ("bucket", Value::Num(bucket_before as f64)),
+                    ("samples_used", Value::Num(self.asm.samples_used() as f64)),
+                ];
+                fields.extend(params_fields(d.params));
+                self.pending.push(PendingEvent::new("asm.sample", fields));
                 if d.phase == AsmPhase::Streaming {
                     self.monitor.reset();
+                    self.last_alarm = AlarmLevel::Clear;
+                    let mut fields = vec![
+                        ("bucket", Value::Num(self.asm.current_bucket() as f64)),
+                        ("samples_used", Value::Num(self.asm.samples_used() as f64)),
+                        ("predicted_mbps", Value::Num(self.asm.predicted())),
+                    ];
+                    fields.extend(params_fields(d.params));
+                    self.pending
+                        .push(PendingEvent::new("asm.converged", fields));
                 }
                 d.params
             }
             AsmPhase::Streaming => {
                 let predicted = self.asm.predicted();
                 let band = self.asm.band() * self.cfg.band_slack;
-                if self.monitor.observe(predicted, band, measured) {
+                let level = self.monitor.observe_level(predicted, band, measured);
+                if level != self.last_alarm {
+                    self.pending.push(PendingEvent::new(
+                        "monitor.alarm",
+                        vec![
+                            ("level", Value::str(level.label())),
+                            ("predicted_mbps", Value::Num(predicted)),
+                            ("band_mbps", Value::Num(band)),
+                            (
+                                "smoothed_mbps",
+                                Value::Num(self.monitor.smoothed().unwrap_or(measured)),
+                            ),
+                        ],
+                    ));
+                    self.last_alarm = level;
+                }
+                if level == AlarmLevel::Confirmed {
                     let recent = self.monitor.smoothed().unwrap_or(measured);
+                    let from_bucket = self.asm.current_bucket();
                     let d = self.asm.reselect(recent);
                     self.monitor.reset();
+                    self.last_alarm = AlarmLevel::Clear;
                     self.retunes += 1;
+                    let mut fields = vec![
+                        ("from_bucket", Value::Num(from_bucket as f64)),
+                        ("to_bucket", Value::Num(self.asm.current_bucket() as f64)),
+                        ("recent_mbps", Value::Num(recent)),
+                        ("retunes", Value::Num(self.retunes as f64)),
+                    ];
+                    fields.extend(params_fields(d.params));
+                    self.pending.push(PendingEvent::new("asm.retune", fields));
                     d.params
                 } else {
                     self.asm.params()
@@ -131,6 +192,20 @@ impl DynamicTuner {
     pub fn rearm(&mut self) {
         self.asm.restart();
         self.monitor.reset();
+        self.last_alarm = AlarmLevel::Clear;
+        self.pending.push(PendingEvent::new(
+            "asm.rearm",
+            vec![("bucket", Value::Num(self.asm.current_bucket() as f64))],
+        ));
+    }
+
+    /// Take the trace events minted since the last drain.  Events are
+    /// clock-less — the caller stamps them with the sim time of the
+    /// chunk that produced them (see `util::trace::TraceScope::stamp`).
+    /// The buffer is bounded by chunk count between drains; untraced
+    /// callers simply never drain and drop the events with the tuner.
+    pub fn drain_trace(&mut self) -> Vec<PendingEvent> {
+        std::mem::take(&mut self.pending)
     }
 
     pub fn asm(&self) -> &Asm {
@@ -311,6 +386,43 @@ mod tests {
         );
         assert_eq!(t.phase(), AsmPhase::Sampling);
         assert_eq!(t.asm().current_bucket(), 1, "restart() re-medians");
+    }
+
+    #[test]
+    fn trace_events_cover_sampling_convergence_and_retune() {
+        let mut t = DynamicTuner::with_defaults(set_with_levels(&[1000.0, 600.0, 200.0]));
+        t.observe(600.0); // converge
+        let names: Vec<&str> = t.pending.iter().map(|e| e.name).collect();
+        assert!(names.contains(&"asm.sample"));
+        assert!(names.contains(&"asm.converged"));
+        let drained = t.drain_trace();
+        assert_eq!(drained.len(), names.len());
+        assert!(t.pending.is_empty(), "drain takes everything");
+        // sustained load change → alarm transitions then a re-tune
+        for _ in 0..10 {
+            t.observe(200.0);
+        }
+        let names: Vec<&str> = t.drain_trace().iter().map(|e| e.name).collect();
+        assert!(names.contains(&"monitor.alarm"));
+        assert!(names.contains(&"asm.retune"));
+        // re-arm after a fault
+        t.rearm();
+        let names: Vec<&str> = t.drain_trace().iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["asm.rearm"]);
+    }
+
+    #[test]
+    fn alarm_events_only_on_transitions() {
+        let mut t = DynamicTuner::with_defaults(set_with_levels(&[1000.0, 600.0, 200.0]));
+        t.observe(600.0);
+        t.drain_trace();
+        for _ in 0..20 {
+            t.observe(600.0); // in band the whole time
+        }
+        assert!(
+            t.drain_trace().is_empty(),
+            "steady in-band streaming mints no events"
+        );
     }
 
     #[test]

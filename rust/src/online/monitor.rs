@@ -25,6 +25,17 @@ pub enum AlarmLevel {
     Confirmed,
 }
 
+impl AlarmLevel {
+    /// Stable lowercase name (trace records, reports).
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlarmLevel::Clear => "clear",
+            AlarmLevel::Warning => "warning",
+            AlarmLevel::Confirmed => "confirmed",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct DeviationMonitor {
     ewma: Ewma,
@@ -54,7 +65,11 @@ impl DeviationMonitor {
     pub fn observe_level(&mut self, predicted: f64, band: f64, measured: f64) -> AlarmLevel {
         let smoothed = self.ewma.update(measured);
         if (smoothed - predicted).abs() > band {
-            self.out_streak += 1;
+            // cap at `streak`: the alarm state machine stays finite, and
+            // a long Confirmed stretch can't bank extra streak credit
+            // that would survive a reset()/re-tune race and mask how
+            // quickly a *fresh* deviation re-confirms
+            self.out_streak = (self.out_streak + 1).min(self.streak);
         } else {
             self.out_streak = 0;
         }
@@ -155,6 +170,33 @@ mod tests {
             let level = b.observe_level(100.0, 20.0, v);
             assert_eq!(fired, level == AlarmLevel::Confirmed);
         }
+    }
+
+    #[test]
+    fn out_streak_is_capped_at_streak() {
+        // a long Confirmed stretch must not bank streak credit: after
+        // the signal returns in band once, a fresh deviation needs the
+        // full streak again — capped or not, the recovery behavior is
+        // observable through how fast Confirmed re-fires
+        let mut m = DeviationMonitor::new(1.0, 3); // alpha 1: no smoothing
+        m.observe_level(100.0, 10.0, 100.0);
+        for _ in 0..50 {
+            assert_ne!(m.observe_level(100.0, 10.0, 300.0), AlarmLevel::Clear);
+        }
+        assert_eq!(m.out_streak, m.streak, "streak must saturate, not grow");
+        // back in band once → Clear, then a fresh deviation re-escalates
+        // through the full Warning ramp
+        assert_eq!(m.observe_level(100.0, 10.0, 100.0), AlarmLevel::Clear);
+        assert_eq!(m.observe_level(100.0, 10.0, 300.0), AlarmLevel::Warning);
+        assert_eq!(m.observe_level(100.0, 10.0, 300.0), AlarmLevel::Warning);
+        assert_eq!(m.observe_level(100.0, 10.0, 300.0), AlarmLevel::Confirmed);
+    }
+
+    #[test]
+    fn alarm_level_labels() {
+        assert_eq!(AlarmLevel::Clear.label(), "clear");
+        assert_eq!(AlarmLevel::Warning.label(), "warning");
+        assert_eq!(AlarmLevel::Confirmed.label(), "confirmed");
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! In-tree infrastructure replacing crates that are unresolvable in this
 //! offline environment (see `DESIGN.md §4`): seeded RNG, JSON, CLI
 //! parsing, statistics, small-matrix linear algebra, a property-testing
-//! mini-framework, a wallclock bench harness, and a deterministic
-//! scoped thread pool ([`par`]).
+//! mini-framework, a wallclock bench harness, a deterministic scoped
+//! thread pool ([`par`]), and a deterministic sim-time tracing/metrics
+//! layer ([`trace`]).
 
 pub mod cli;
 pub mod err;
@@ -14,3 +15,4 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod timer;
+pub mod trace;

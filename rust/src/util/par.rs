@@ -26,12 +26,38 @@
 //! spline rows).
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 thread_local! {
     /// Set inside pool workers so nested `par_map` calls run serial.
     static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Process-wide fan-out counters for [`crate::util::trace`]: how many
+/// `par_map_with` entries ran and how many work units they covered.
+/// Both are counted unconditionally (serial fallback included), so the
+/// totals are **thread-invariant** — they depend only on the work
+/// submitted, never on `PALLAS_THREADS` or nesting depth.  Tracers
+/// snapshot these at construction and report deltas.
+static FANOUT_CALLS: AtomicU64 = AtomicU64::new(0);
+static FANOUT_UNITS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the fan-out counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FanoutStats {
+    /// `par_map_with` invocations (including serial-degraded ones).
+    pub calls: u64,
+    /// total work units submitted across those invocations.
+    pub units: u64,
+}
+
+/// Current process-wide fan-out totals (monotone).
+pub fn fanout_stats() -> FanoutStats {
+    FanoutStats {
+        calls: FANOUT_CALLS.load(Ordering::Relaxed),
+        units: FANOUT_UNITS.load(Ordering::Relaxed),
+    }
 }
 
 /// True when the current thread is a pool worker (nested call site).
@@ -74,6 +100,8 @@ where
     F: Fn(usize, &T) -> U + Sync,
 {
     let n = items.len();
+    FANOUT_CALLS.fetch_add(1, Ordering::Relaxed);
+    FANOUT_UNITS.fetch_add(n as u64, Ordering::Relaxed);
     if threads <= 1 || n < 2 || in_worker() {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
@@ -203,6 +231,18 @@ mod tests {
         assert!(par_map_with(8, &empty, |_, &x| x).is_empty());
         let one = [42u32];
         assert_eq!(par_map_with(8, &one, |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn fanout_stats_count_serial_and_parallel_calls() {
+        let before = fanout_stats();
+        let items: Vec<u32> = (0..5).collect();
+        let _ = par_map_with(1, &items, |_, &x| x);
+        let _ = par_map_with(4, &items, |_, &x| x);
+        let after = fanout_stats();
+        // >= because sibling tests in this binary also bump the totals
+        assert!(after.calls >= before.calls + 2);
+        assert!(after.units >= before.units + 10);
     }
 
     #[test]

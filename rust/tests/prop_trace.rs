@@ -1,0 +1,116 @@
+//! Property: the trace a seeded workload leaves behind is byte-
+//! identical for any `PALLAS_THREADS` setting.
+//!
+//! This is the `util::trace` analogue of `prop_parallel.rs`: a seeded
+//! exp_robustness-style cell (faulted ASM transfers, tuning cache on)
+//! fans out over `util::par`, and the JSONL export — records, sequence
+//! numbers, metric folds, everything — must not depend on how many
+//! workers drained the queue.  The test mutates `PALLAS_THREADS`, a
+//! process-global, so everything lives in one `#[test]` (cargo gives
+//! each integration-test binary its own process).
+
+use std::sync::Arc;
+
+use twophase::baselines::ann_ot::AnnOtModel;
+use twophase::baselines::api::OptimizerKind;
+use twophase::baselines::static_ann::StaticAnnModel;
+use twophase::coordinator::orchestrator::{Orchestrator, OrchestratorConfig, TransferRequest};
+use twophase::faults::{FaultPlan, FaultPlanConfig};
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::offline::pipeline::{KnowledgeBase, OfflineConfig};
+use twophase::sim::dataset::Dataset;
+use twophase::sim::profile::NetProfile;
+use twophase::util::trace::{schema_of_jsonl, Tracer};
+use twophase::util::{json, par};
+
+#[test]
+fn trace_export_is_bit_identical_across_thread_counts() {
+    let profile = NetProfile::xsede();
+    let logs = generate_history(
+        &profile,
+        &GeneratorConfig {
+            days: 3.0,
+            transfers_per_hour: 6.0,
+            seed: 42,
+        },
+    );
+    let kb = Arc::new(KnowledgeBase::build_native(
+        logs.clone(),
+        OfflineConfig::default(),
+    ));
+    let sp = Arc::new(StaticAnnModel::train(&logs, 32, 0xE1));
+    let annot = Arc::new(AnnOtModel::train(&logs, 32, 0xE2));
+
+    let mut exports: Vec<(&str, String)> = Vec::new();
+    for threads in ["1", "2", "8"] {
+        std::env::set_var("PALLAS_THREADS", threads);
+        assert_eq!(par::max_threads(), threads.parse::<usize>().unwrap());
+        let orch = Orchestrator::new(
+            Arc::clone(&kb),
+            Arc::clone(&sp),
+            Arc::clone(&annot),
+            OrchestratorConfig {
+                cache_capacity: 8,
+                ..OrchestratorConfig::default()
+            },
+        )
+        .expect("3-day corpus yields a non-empty knowledge base");
+        let tracer = Arc::new(Tracer::new());
+        orch.set_tracer(Some(Arc::clone(&tracer)));
+
+        // one seeded exp_robustness-style cell: faulted ASM transfers
+        // with distinct fingerprints (cache verdicts must not depend on
+        // worker interleaving), fanned out over the pool under test
+        let requests: Vec<TransferRequest> = (0..4u64)
+            .map(|i| TransferRequest {
+                id: i + 1,
+                profile: profile.clone(),
+                dataset: Dataset::new(64 << i, 128.0),
+                model: OptimizerKind::Asm,
+                seed: 0x5EED ^ (i << 16),
+                phase_s: 7_200.0,
+            })
+            .collect();
+        let reports = par::par_map(&requests, |i, req| {
+            let plan = FaultPlan::generate(
+                &profile,
+                &FaultPlanConfig {
+                    events_per_hour: 60.0,
+                    ..FaultPlanConfig::with_intensity(0.6)
+                },
+                0xFA117 ^ ((i as u64) << 8),
+            );
+            orch.execute_with_faults(req, Some(plan))
+        });
+        assert_eq!(reports.len(), 4);
+        orch.set_tracer(None);
+        exports.push((threads, tracer.export_string()));
+    }
+    std::env::remove_var("PALLAS_THREADS");
+
+    let (_, serial) = &exports[0];
+    assert!(!serial.is_empty());
+    for (threads, export) in &exports[1..] {
+        assert_eq!(
+            export, serial,
+            "{threads}-thread trace diverged from serial (byte comparison)"
+        );
+    }
+
+    // every line is valid JSON with a kind, and the schema matches the
+    // golden file the CI smoke checks against
+    let mut n_lines = 0usize;
+    for line in serial.lines() {
+        let v = json::Value::parse(line).expect("trace line parses as JSON");
+        assert!(v.get("kind").as_str().is_some(), "line missing kind: {line}");
+        n_lines += 1;
+    }
+    assert!(n_lines > 10, "expected a substantial trace, got {n_lines} lines");
+    let golden = std::fs::read_to_string("../scripts/trace-schema.golden")
+        .expect("golden schema is checked in");
+    assert_eq!(
+        schema_of_jsonl(serial).expect("schema extraction"),
+        golden,
+        "trace schema drifted from scripts/trace-schema.golden"
+    );
+}

@@ -28,3 +28,18 @@ if command -v python3 >/dev/null 2>&1; then
     python3 -c "import json; json.load(open('BENCH_parallel.json'))"
     echo "BENCH_parallel.json parses"
 fi
+
+# trace smoke: a tiny traced transfer must emit JSONL whose every line
+# parses and whose schema (field names per record kind) matches the
+# checked-in golden; `trace-schema --golden` exits nonzero on drift
+rm -f TRACE_smoke.jsonl
+cargo run --release --bin twophase -- transfer \
+    --files 8 --avg-mb 64 --days 2 --trace TRACE_smoke.jsonl
+test -s TRACE_smoke.jsonl
+if command -v python3 >/dev/null 2>&1; then
+    python3 -c "import json,sys; [json.loads(l) for l in open('TRACE_smoke.jsonl')]"
+    echo "TRACE_smoke.jsonl parses"
+fi
+cargo run --release --bin twophase -- trace-schema TRACE_smoke.jsonl \
+    --golden ../scripts/trace-schema.golden
+rm -f TRACE_smoke.jsonl
