@@ -1,6 +1,7 @@
-//! Multi-user fairness scenario (§5.4): four users share the Chameleon
+//! Multi-user fairness scenario (§5.4): users share the Chameleon
 //! bottleneck, all running the same optimizer; compares ASM, HARP, GO
-//! and the default across aggregate throughput and per-user fairness.
+//! and the default across aggregate throughput and per-user fairness,
+//! swept over user counts with the paper's four as the headline.
 //!
 //! Run with: `cargo run --release --example multiuser_fairness`
 
@@ -9,11 +10,14 @@ use twophase::experiments::fig9;
 use twophase::util::stats;
 
 fn main() {
-    println!("== multi-user fairness (Chameleon, 4 users) ==\n");
+    println!("== multi-user fairness (Chameleon) ==\n");
     let res = fig9::run();
 
-    println!("\nper-user time-mean shares and Jain indices:");
-    for row in &res.rows {
+    println!(
+        "\nper-user time-mean shares and Jain indices at {} users:",
+        fig9::USERS_PAPER
+    );
+    for row in res.rows.iter().filter(|r| r.users == fig9::USERS_PAPER) {
         println!(
             "  {:<6} jain={:.3}  per-user σ={:>7.1} Mbps",
             row.model.label(),
@@ -30,9 +34,7 @@ fn main() {
         asm / noopt.max(1e-9)
     );
     let asm_users: Vec<f64> = res
-        .rows
-        .iter()
-        .find(|r| r.model == OptimizerKind::Asm)
+        .row(OptimizerKind::Asm, fig9::USERS_PAPER)
         .map(|r| r.per_user_mbps.clone())
         .unwrap_or_default();
     println!(

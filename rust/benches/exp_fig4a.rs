@@ -1,9 +1,33 @@
 //! Regenerates the paper's fig4a (see DESIGN.md §5). `harness = false`:
 //! the in-tree timer harness replaces criterion (offline registry).
+//! Times the per-cell forked-seed sweep serial (`PALLAS_THREADS=1`) vs
+//! parallel and asserts the two runs are bit-identical.
+
+use twophase::util::par;
+use twophase::util::timer::time_once;
 
 fn main() {
-    let (_, elapsed) = twophase::util::timer::time_once(|| {
-        twophase::experiments::fig4a::run()
-    });
-    println!("[bench] exp_fig4a completed in {elapsed:?}");
+    let orig_threads = std::env::var("PALLAS_THREADS").ok();
+    std::env::set_var("PALLAS_THREADS", "1");
+    let (serial, t_serial) = time_once(|| twophase::experiments::fig4a::run());
+    match &orig_threads {
+        Some(v) => std::env::set_var("PALLAS_THREADS", v),
+        None => std::env::remove_var("PALLAS_THREADS"),
+    }
+    let threads = par::max_threads();
+    let (parallel, elapsed) = time_once(|| twophase::experiments::fig4a::run());
+
+    assert_eq!(
+        serial.mean.to_bits(),
+        parallel.mean.to_bits(),
+        "parallel fig4a sweep must be bit-identical to serial"
+    );
+    assert_eq!(serial.sigma.to_bits(), parallel.sigma.to_bits());
+    for (a, b) in serial.cell_means.iter().zip(&parallel.cell_means) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    println!(
+        "[bench] exp_fig4a completed in {elapsed:?} \
+         (serial {t_serial:?} vs {threads} threads, outputs bit-identical)"
+    );
 }

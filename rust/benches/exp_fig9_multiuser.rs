@@ -1,12 +1,93 @@
 //! Regenerates Figures 2/9/10 + the §5.4 fairness numbers
-//! (multi-user contention on Chameleon).  `harness = false`.
+//! (multi-user contention on Chameleon), timing the experiment's grid
+//! fan-out serial (`PALLAS_THREADS=1`) vs parallel and proving the two
+//! results bit-identical via `Fig9Result::digest`.  Writes
+//! `BENCH_fig9.json` with the wall times and the `util::par` fan-out
+//! trace counters (parsed by the CI bench-smoke step).
+//! `harness = false`.
+
+use std::sync::Arc;
+
+use twophase::baselines::api::OptimizerKind;
+use twophase::experiments::{common, fig9};
+use twophase::util::json::Value;
+use twophase::util::par;
+use twophase::util::timer::time_once;
+use twophase::util::trace::Tracer;
 
 fn main() {
-    let (res, elapsed) = twophase::util::timer::time_once(|| {
-        twophase::experiments::fig9::run()
-    });
-    // headline guardrails printed for EXPERIMENTS.md
-    let asm = res.aggregate(twophase::baselines::api::OptimizerKind::Asm);
-    let noopt = res.aggregate(twophase::baselines::api::OptimizerKind::NoOpt);
-    println!("[bench] exp_fig9_multiuser completed in {elapsed:?} (ASM/NoOpt = {:.1}x)", asm / noopt.max(1e-9));
+    // Warm the shared context outside the timed sections (and outside
+    // any pool worker), so both runs time only the experiment fan-out
+    // and the tracer's counter window sees only fig9's own par calls.
+    let _ = common::ctx();
+
+    let orig_threads = std::env::var("PALLAS_THREADS").ok();
+    std::env::set_var("PALLAS_THREADS", "1");
+    let (serial, t_serial) = time_once(|| fig9::run());
+    match &orig_threads {
+        Some(v) => std::env::set_var("PALLAS_THREADS", v),
+        None => std::env::remove_var("PALLAS_THREADS"),
+    }
+    let threads = par::max_threads();
+
+    let tracer = Arc::new(Tracer::new());
+    let fan_before = par::fanout_stats();
+    let (parallel, t_par) = time_once(|| fig9::run_traced(Some(&tracer)));
+    let fan_after = par::fanout_stats();
+    let metrics = tracer.metrics();
+
+    assert_eq!(
+        serial.digest(),
+        parallel.digest(),
+        "parallel fig9 grid must be bit-identical to serial"
+    );
+    let speedup = t_serial.as_secs_f64() / t_par.as_secs_f64().max(1e-9);
+    println!(
+        "[bench] fig9 grid ({} cells): serial {t_serial:?} vs {threads} threads \
+         {t_par:?} ({speedup:.2}x, digests agree)",
+        parallel.rows.len() + parallel.skipped.len()
+    );
+
+    // the tracer's exported counters and a direct counter snapshot must
+    // tell the same story (CI asserts this from BENCH_fig9.json)
+    let calls = metrics.counter("par.fanout_calls");
+    let units = metrics.counter("par.fanout_units");
+    let calls_direct = fan_after.calls - fan_before.calls;
+    let units_direct = fan_after.units - fan_before.units;
+    println!(
+        "[bench] fan-out trace: {calls} par calls over {units} units \
+         (direct snapshot: {calls_direct}/{units_direct})"
+    );
+
+    let asm = parallel.aggregate(OptimizerKind::Asm);
+    let noopt = parallel.aggregate(OptimizerKind::NoOpt);
+    println!(
+        "[bench] exp_fig9_multiuser completed (ASM/NoOpt = {:.1}x)",
+        asm / noopt.max(1e-9)
+    );
+
+    let out = Value::obj(vec![
+        ("bench", Value::str("exp_fig9_multiuser")),
+        ("threads", Value::Num(threads as f64)),
+        ("serial_s", Value::Num(t_serial.as_secs_f64())),
+        ("parallel_s", Value::Num(t_par.as_secs_f64())),
+        ("speedup", Value::Num(speedup)),
+        (
+            "digest_match",
+            Value::Bool(serial.digest() == parallel.digest()),
+        ),
+        ("rows", Value::Num(parallel.rows.len() as f64)),
+        ("skips", Value::Num(parallel.skipped.len() as f64)),
+        (
+            "fanout",
+            Value::obj(vec![
+                ("calls", Value::Num(calls as f64)),
+                ("units", Value::Num(units as f64)),
+                ("calls_direct", Value::Num(calls_direct as f64)),
+                ("units_direct", Value::Num(units_direct as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_fig9.json", format!("{out}\n")).expect("write BENCH_fig9.json");
+    println!("[bench] exp_fig9_multiuser wrote BENCH_fig9.json");
 }

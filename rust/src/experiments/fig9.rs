@@ -1,66 +1,144 @@
 //! Figures 2/9/10 + §5.4: the multi-user fairness experiment on the
-//! Chameleon profile — four users simultaneously running the same
-//! optimization technique on one bottleneck.
+//! Chameleon profile — users simultaneously running the same
+//! optimization technique on one bottleneck, swept over user counts.
 //!
-//! Paper headlines to reproduce in shape: ASM ≈ 1.7× HARP, ≈ 3.4× GO,
-//! ≈ 5× No-Optimization in aggregate; ASM's per-user σ roughly half of
-//! HARP's; GO/NoOpt fair but slow.
+//! Paper headlines to reproduce in shape (at the paper's four users):
+//! ASM ≈ 1.7× HARP, ≈ 3.4× GO, ≈ 5× No-Optimization in aggregate;
+//! ASM's per-user σ roughly half of HARP's; GO/NoOpt fair but slow.
+//!
+//! The `(model, user-count)` grid fans out over [`crate::util::par`]
+//! via [`par_cells`]: each cell's `MultiUserSim` event loop stays
+//! serial inside the cell, the cell seed is [`Rng::fork`]`(FIG9_SEED,
+//! cell_idx)` (a pure function of the index, never of execution
+//! order), and results reduce in cell order — so the full result is
+//! bit-identical for any `PALLAS_THREADS` setting
+//! (`tests/prop_fig9_parallel.rs` proves 1/2/8).  Cells whose model
+//! has no multi-user policy form are skipped with a warning *and* an
+//! `experiment.skip` trace event, so skips show up in JSONL exports
+//! instead of vanishing into stderr.
+
+use std::sync::Arc;
 
 use crate::baselines::api::{OptimizerKind, PolicyAdapter};
 use crate::baselines::globus::Globus;
 use crate::baselines::harp::Harp;
-use crate::experiments::common::ctx;
+use crate::experiments::common::{ctx, par_cells};
 use crate::online::controller::DynamicTuner;
 use crate::sim::dataset::Dataset;
-use crate::sim::multiuser::{MultiUserSim, UserPolicy};
+use crate::sim::multiuser::{outcomes_digest, MultiUserSim, UserPolicy};
 use crate::sim::profile::NetProfile;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::table::Table;
+use crate::util::trace::Tracer;
 use crate::Params;
+
+/// Seed quoted in EXPERIMENTS.md; parent of every cell fork.
+pub const FIG9_SEED: u64 = 0x519;
+/// Contention levels swept; [`USERS_PAPER`] is the paper's headline.
+pub const USER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+pub const USERS_PAPER: usize = 4;
+const DURATION_S: f64 = 600.0;
+/// Scope-id namespace for per-cell skip events (offset by cell index).
+const TRACE_SCOPE_BASE: u64 = 0xF19_0000;
 
 pub struct Fig9Row {
     pub model: OptimizerKind,
+    pub users: usize,
     pub per_user_mbps: Vec<f64>,
     pub aggregate_mbps: f64,
     pub stddev_mbps: f64,
     pub jain: f64,
+    /// [`outcomes_digest`] of the cell's full simulation output.
+    pub digest: u64,
+}
+
+/// A grid cell fig9 could not evaluate (no multi-user policy form).
+pub struct Fig9Skip {
+    pub model: OptimizerKind,
+    pub users: usize,
+    pub reason: &'static str,
 }
 
 pub struct Fig9Result {
     pub rows: Vec<Fig9Row>,
+    pub skipped: Vec<Fig9Skip>,
 }
 
 impl Fig9Result {
-    pub fn aggregate(&self, model: OptimizerKind) -> f64 {
+    /// The row for one grid cell, if it was evaluated.
+    pub fn row(&self, model: OptimizerKind, users: usize) -> Option<&Fig9Row> {
         self.rows
             .iter()
-            .find(|r| r.model == model)
+            .find(|r| r.model == model && r.users == users)
+    }
+
+    /// Aggregate Mbps at the paper's user count.
+    pub fn aggregate(&self, model: OptimizerKind) -> f64 {
+        self.row(model, USERS_PAPER)
             .map(|r| r.aggregate_mbps)
             .unwrap_or(0.0)
     }
 
+    /// Per-user stddev at the paper's user count.
     pub fn stddev(&self, model: OptimizerKind) -> f64 {
-        self.rows
-            .iter()
-            .find(|r| r.model == model)
+        self.row(model, USERS_PAPER)
             .map(|r| r.stddev_mbps)
             .unwrap_or(0.0)
     }
+
+    /// FNV-1a over every row's and skip's exact content — the witness
+    /// `tests/prop_fig9_parallel.rs` compares across thread counts.
+    pub fn digest(&self) -> u64 {
+        fn mix(h: &mut u64, x: u64) {
+            for byte in x.to_le_bytes() {
+                *h ^= byte as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        fn mix_str(h: &mut u64, s: &str) {
+            mix(h, s.len() as u64);
+            for &b in s.as_bytes() {
+                mix(h, b as u64);
+            }
+        }
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        mix(&mut h, self.rows.len() as u64);
+        for r in &self.rows {
+            mix_str(&mut h, r.model.label());
+            mix(&mut h, r.users as u64);
+            for &v in &r.per_user_mbps {
+                mix(&mut h, v.to_bits());
+            }
+            mix(&mut h, r.aggregate_mbps.to_bits());
+            mix(&mut h, r.stddev_mbps.to_bits());
+            mix(&mut h, r.jain.to_bits());
+            mix(&mut h, r.digest);
+        }
+        mix(&mut h, self.skipped.len() as u64);
+        for s in &self.skipped {
+            mix_str(&mut h, s.model.label());
+            mix(&mut h, s.users as u64);
+            mix_str(&mut h, s.reason);
+        }
+        h
+    }
 }
 
-const USERS: usize = 4;
-const DURATION_S: f64 = 600.0;
-
-/// Policies for one model, or None for models fig9 does not evaluate
-/// (the per-chunk optimizers have no multi-user policy form here).
-fn policies_for(model: OptimizerKind, dataset: &Dataset) -> Option<Vec<Box<dyn UserPolicy>>> {
-    let c = ctx();
+/// Policies for one model at one user count, or the skip reason for
+/// models fig9 does not evaluate.
+fn policies_for(
+    model: OptimizerKind,
+    users: usize,
+    dataset: &Dataset,
+) -> Result<Vec<Box<dyn UserPolicy>>, &'static str> {
     let profile = NetProfile::chameleon();
-    (0..USERS)
-        .map(|_u| -> Option<Box<dyn UserPolicy>> {
+    (0..users)
+        .map(|_u| -> Result<Box<dyn UserPolicy>, &'static str> {
             match model {
                 OptimizerKind::Asm => {
-                    let set = c
+                    let set = ctx()
                         .kb
                         .query(
                             profile.rtt_s,
@@ -68,58 +146,127 @@ fn policies_for(model: OptimizerKind, dataset: &Dataset) -> Option<Vec<Box<dyn U
                             dataset.avg_file_mb,
                             dataset.n_files,
                         )
-                        .expect("kb has surfaces")
+                        .ok_or("knowledge base has no surface for this profile/dataset")?
                         .clone();
-                    Some(Box::new(DynamicTuner::with_defaults(set)))
+                    Ok(Box::new(DynamicTuner::with_defaults(set)))
                 }
                 OptimizerKind::Harp => {
-                    Some(Box::new(PolicyAdapter(Harp::plan(&profile, dataset))))
+                    Ok(Box::new(PolicyAdapter(Harp::plan(&profile, dataset))))
                 }
                 OptimizerKind::Globus => {
-                    Some(Box::new(PolicyAdapter(Globus::for_dataset(dataset))))
+                    Ok(Box::new(PolicyAdapter(Globus::for_dataset(dataset))))
                 }
-                OptimizerKind::NoOpt => Some(Box::new(move |_: &_| Params::DEFAULT)),
-                _ => None,
+                OptimizerKind::NoOpt => Ok(Box::new(move |_: &_| Params::DEFAULT)),
+                _ => Err("no multi-user policy form for this model"),
             }
         })
         .collect()
 }
 
+/// One evaluated or skipped grid cell (the fan-out's unit result).
+enum CellOut {
+    Row(Fig9Row),
+    Skip(Fig9Skip),
+}
+
 pub fn run() -> Fig9Result {
+    run_traced(None)
+}
+
+/// The full experiment (paper model set), optionally traced.
+pub fn run_traced(tracer: Option<&Arc<Tracer>>) -> Fig9Result {
+    run_models_traced(
+        &[
+            OptimizerKind::Asm,
+            OptimizerKind::Harp,
+            OptimizerKind::Globus,
+            OptimizerKind::NoOpt,
+        ],
+        tracer,
+    )
+}
+
+/// Run the `(model, user-count)` grid for an explicit model set.
+pub fn run_models_traced(
+    models: &[OptimizerKind],
+    tracer: Option<&Arc<Tracer>>,
+) -> Fig9Result {
     let dataset = Dataset::new(512, 256.0);
-    let models = [
-        OptimizerKind::Asm,
-        OptimizerKind::Harp,
-        OptimizerKind::Globus,
-        OptimizerKind::NoOpt,
-    ];
+    // The shared context builds its own parallel pipeline; touch it
+    // before the fan-out so the build never happens inside a pool
+    // worker (where nested par_map degrades to serial).
+    if models.contains(&OptimizerKind::Asm) {
+        let _ = ctx();
+    }
+
+    let units: Vec<(OptimizerKind, usize)> = models
+        .iter()
+        .flat_map(|&m| USER_COUNTS.iter().map(move |&u| (m, u)))
+        .collect();
+
+    let cells = par_cells(&units, |ci, &(model, users)| {
+        match policies_for(model, users, &dataset) {
+            Err(reason) => CellOut::Skip(Fig9Skip {
+                model,
+                users,
+                reason,
+            }),
+            Ok(mut pols) => {
+                // serial-identical cell seed: pure in the cell index
+                let seed = Rng::fork(FIG9_SEED, ci as u64).next_u64();
+                let mut sim = MultiUserSim::new(NetProfile::chameleon(), seed);
+                let ds = vec![dataset.clone(); users];
+                let out = sim.run(&mut pols, &ds, DURATION_S);
+                let per_user: Vec<f64> =
+                    out.iter().map(|u| u.mean_throughput_mbps).collect();
+                CellOut::Row(Fig9Row {
+                    model,
+                    users,
+                    aggregate_mbps: per_user.iter().sum(),
+                    stddev_mbps: stats::std_pop(&per_user),
+                    jain: stats::jain_index(&per_user),
+                    digest: outcomes_digest(&out),
+                    per_user_mbps: per_user,
+                })
+            }
+        }
+    });
 
     let mut rows = Vec::new();
-    for model in models {
-        let mut sim = MultiUserSim::new(NetProfile::chameleon(), 0x519);
-        let Some(mut pols) = policies_for(model, &dataset) else {
-            eprintln!(
-                "fig9: skipping {} — no multi-user policy form for this model",
-                model.label()
-            );
-            continue;
-        };
-        let ds = vec![dataset.clone(); USERS];
-        let out = sim.run(&mut pols, &ds, DURATION_S);
-        let per_user: Vec<f64> = out.iter().map(|u| u.mean_throughput_mbps).collect();
-        rows.push(Fig9Row {
-            model,
-            aggregate_mbps: per_user.iter().sum(),
-            stddev_mbps: stats::std_pop(&per_user),
-            jain: stats::jain_index(&per_user),
-            per_user_mbps: per_user,
-        });
+    let mut skipped = Vec::new();
+    for (ci, cell) in cells.into_iter().enumerate() {
+        match cell {
+            CellOut::Row(r) => rows.push(r),
+            CellOut::Skip(s) => {
+                eprintln!(
+                    "fig9: skipping {} at {} users — {}",
+                    s.model.label(),
+                    s.users,
+                    s.reason
+                );
+                // skips must show in JSONL exports, not just stderr
+                let mut scope = Tracer::scope_opt(tracer, TRACE_SCOPE_BASE + ci as u64);
+                scope.event(
+                    "experiment.skip",
+                    0.0,
+                    vec![
+                        ("experiment", Value::str("fig9")),
+                        ("model", Value::str(s.model.label())),
+                        ("users", Value::Num(s.users as f64)),
+                        ("reason", Value::str(s.reason)),
+                    ],
+                );
+                scope.count("fig9.skips", 1);
+                skipped.push(s);
+            }
+        }
     }
+    let res = Fig9Result { rows, skipped };
 
     let mut t = Table::new(&[
         "model", "user1", "user2", "user3", "user4", "aggregate", "stddev", "jain",
     ]);
-    for r in &rows {
+    for r in res.rows.iter().filter(|r| r.users == USERS_PAPER) {
         let mut row: Vec<String> = vec![r.model.label().to_string()];
         row.extend(r.per_user_mbps.iter().map(|v| format!("{v:.0}")));
         row.push(format!("{:.0}", r.aggregate_mbps));
@@ -128,11 +275,27 @@ pub fn run() -> Fig9Result {
         t.row(&row);
     }
     println!(
-        "Figures 2/9/10 — {USERS}-user contention on Chameleon ({DURATION_S:.0}s, Mbps)"
+        "Figures 2/9/10 — {USERS_PAPER}-user contention on Chameleon ({DURATION_S:.0}s, Mbps)"
     );
     t.print();
 
-    let res = Fig9Result { rows };
+    let mut sweep = Table::new(&["model", "u=1", "u=2", "u=4", "u=8"]);
+    for &m in models {
+        if !res.rows.iter().any(|r| r.model == m) {
+            continue;
+        }
+        let mut row = vec![m.label().to_string()];
+        for &u in &USER_COUNTS {
+            row.push(match res.row(m, u) {
+                Some(r) => format!("{:.0}", r.aggregate_mbps),
+                None => "-".to_string(),
+            });
+        }
+        sweep.row(&row);
+    }
+    println!("  aggregate Mbps by user count:");
+    sweep.print();
+
     let asm = res.aggregate(OptimizerKind::Asm);
     println!(
         "  ASM vs HARP: {:.2}x (paper 1.7x) | vs GO: {:.2}x (paper 3.4x) | vs NoOpt: {:.2}x (paper 5x)",
@@ -146,4 +309,38 @@ pub fn run() -> Fig9Result {
         res.stddev(OptimizerKind::Harp)
     );
     res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_emits_trace_event() {
+        // NelderMead has no multi-user policy form, so every cell
+        // skips — and every skip must land in the JSONL export.
+        // (Does not touch ctx(): the skip path needs no knowledge base.)
+        let tracer = Arc::new(Tracer::new());
+        let res = run_models_traced(&[OptimizerKind::NelderMead], Some(&tracer));
+        assert!(res.rows.is_empty());
+        assert_eq!(res.skipped.len(), USER_COUNTS.len());
+        let text = tracer.export_string();
+        assert!(text.contains("\"name\":\"experiment.skip\""));
+        assert!(text.contains("\"experiment\":\"fig9\""));
+        assert!(text.contains("\"reason\":\"no multi-user policy form for this model\""));
+        assert_eq!(
+            tracer.metrics().counter("fig9.skips"),
+            USER_COUNTS.len() as u64
+        );
+    }
+
+    #[test]
+    fn untraced_skip_is_still_counted_in_result() {
+        let res = run_models_traced(&[OptimizerKind::SingleChunk], None);
+        assert!(res.rows.is_empty());
+        assert_eq!(res.skipped.len(), USER_COUNTS.len());
+        for s in &res.skipped {
+            assert_eq!(s.model, OptimizerKind::SingleChunk);
+        }
+    }
 }

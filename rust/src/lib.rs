@@ -40,7 +40,11 @@
 //! * [`coordinator`] — the leader loop: request intake, sample-transfer
 //!   scheduling, chunk streaming, multi-user orchestration, metrics;
 //! * [`experiments`] — one driver per paper table/figure, shared by the
-//!   benches in `rust/benches/` and the CLI;
+//!   benches in `rust/benches/` and the CLI; sweeps fan their grid
+//!   cells out over [`util::par`], each cell seeded by the pure
+//!   fork-per-cell rule `Rng::fork(seed, cell_idx)` so results are
+//!   bit-identical at any thread count (ROADMAP §Experiment
+//!   parallelism);
 //! * [`analysis`] — `pallas-lint`: a token-level static scanner that
 //!   machine-checks the determinism & robustness invariants the layers
 //!   above rely on (rules R1–R6: deterministic containers, pooled

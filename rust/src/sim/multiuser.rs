@@ -59,6 +59,39 @@ pub struct UserOutcome {
     pub transferred_mb: f64,
 }
 
+/// FNV-1a over the exact bit patterns of a run's full output — every
+/// per-tick series point, mean and byte total of every user.  The
+/// equality witness the parallel experiment fan-out compares against
+/// serial (`tests/prop_fig9_parallel.rs`, `benches/exp_fig9_multiuser`):
+/// a single reordered f64 operation anywhere in a cell changes it.
+pub fn outcomes_digest(outs: &[UserOutcome]) -> u64 {
+    struct Fnv(u64);
+    impl Fnv {
+        fn u(&mut self, x: u64) {
+            for byte in x.to_le_bytes() {
+                self.0 ^= byte as u64;
+                self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        fn f(&mut self, v: f64) {
+            self.u(v.to_bits());
+        }
+    }
+    let mut h = Fnv(0xCBF2_9CE4_8422_2325);
+    h.u(outs.len() as u64);
+    for u in outs {
+        h.u(u.user_id as u64);
+        h.u(u.series.len() as u64);
+        for &(t, th) in &u.series {
+            h.f(t);
+            h.f(th);
+        }
+        h.f(u.mean_throughput_mbps);
+        h.f(u.transferred_mb);
+    }
+    h.0
+}
+
 /// Multi-user shared-bottleneck simulation.
 pub struct MultiUserSim {
     pub profile: NetProfile,

@@ -139,6 +139,20 @@ where
         .collect()
 }
 
+/// Map `f` over the index range `0..n` with the default worker count,
+/// preserving index order — the unit-indexed sibling of [`par_map`]
+/// for fan-outs whose work is defined by an index alone (experiment
+/// grid cells, per-day history shards, per-cell RNG forks).  Same
+/// determinism contract: bit-identical to serial for any thread count.
+pub fn par_indices<U, F>(n: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    let idx: Vec<usize> = (0..n).collect();
+    par_map(&idx, |i, _| f(i))
+}
+
 /// Chunked map: splits `items` into fixed `chunk`-sized windows, maps
 /// each window to a `Vec<U>`, and flattens in window order.  Because
 /// the chunk boundaries depend only on `chunk` (not the thread count),
@@ -223,6 +237,13 @@ mod tests {
         });
         assert_eq!(out[0], 6); // 0+1+2+3, x = 0
         assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn par_indices_matches_serial_and_preserves_order() {
+        let serial: Vec<usize> = (0..97).map(|i| i * 3 + 1).collect();
+        assert_eq!(par_indices(97, |i| i * 3 + 1), serial);
+        assert!(par_indices(0, |i| i).is_empty());
     }
 
     #[test]

@@ -40,10 +40,22 @@ impl Rng {
         rng
     }
 
-    /// Derive an independent child generator (for per-thread streams).
-    pub fn fork(&mut self, tag: u64) -> Rng {
-        let s = (self.next_u64()).wrapping_add(tag.wrapping_mul(0x9E3779B97F4A7C15));
-        Rng::new(s)
+    /// Derive the `idx`-th child stream of `seed` — the seeding rule
+    /// behind every parallel experiment fan-out (ROADMAP §Experiment
+    /// parallelism).  A fork is a *pure function* of `(seed, idx)`: it
+    /// reads no generator state, so forked streams are deterministic,
+    /// identical no matter which order (or thread) forks them, and
+    /// pairwise distinct across indices for a fixed parent seed (both
+    /// the index mix and the SplitMix64 finalizer are bijections, so
+    /// distinct indices produce distinct child seeds).
+    pub fn fork(seed: u64, idx: u64) -> Rng {
+        let mut s = seed;
+        let parent = splitmix64(&mut s);
+        let mut child = parent
+            ^ idx
+                .wrapping_mul(0xA24BAED4963EE407)
+                .wrapping_add(0x9E3779B97F4A7C15);
+        Rng::new(splitmix64(&mut child))
     }
 
     pub fn next_u32(&mut self) -> u32 {
@@ -247,10 +259,30 @@ mod tests {
 
     #[test]
     fn fork_streams_are_independent() {
-        let mut base = Rng::new(21);
-        let mut a = base.fork(0);
-        let mut b = base.fork(1);
+        let mut a = Rng::fork(21, 0);
+        let mut b = Rng::fork(21, 1);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn fork_is_pure_in_seed_and_index() {
+        for idx in [0u64, 1, 7, 600, u64::MAX] {
+            let mut a = Rng::fork(0x46a, idx);
+            let mut b = Rng::fork(0x46a, idx);
+            for _ in 0..16 {
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn fork_decorrelates_from_parent_stream() {
+        let mut parent = Rng::new(9);
+        let mut child = Rng::fork(9, 0);
+        let same = (0..64)
+            .filter(|_| parent.next_u64() == child.next_u64())
+            .count();
         assert!(same < 2);
     }
 }

@@ -1,0 +1,30 @@
+//! Thread-invariance of the fig9 multi-user grid fan-out: the full
+//! experiment result (every per-tick series point folded into
+//! `Fig9Result::digest`) must be bit-identical for `PALLAS_THREADS`
+//! ∈ {1, 2, 8}.  Kept as the single test in this binary because it
+//! mutates the process-global `PALLAS_THREADS` (and pins
+//! `TWOPHASE_DAYS` before anything touches the shared context).
+
+#[test]
+fn fig9_digest_is_thread_invariant() {
+    // small corpus: the one-time ctx() build is not what's under test
+    std::env::set_var("TWOPHASE_DAYS", "3");
+    let orig = std::env::var("PALLAS_THREADS").ok();
+
+    let mut digests: Vec<(&str, u64)> = Vec::new();
+    for threads in ["1", "2", "8"] {
+        std::env::set_var("PALLAS_THREADS", threads);
+        let res = twophase::experiments::fig9::run();
+        assert!(!res.rows.is_empty(), "paper grid evaluated no cells");
+        digests.push((threads, res.digest()));
+    }
+    match orig {
+        Some(v) => std::env::set_var("PALLAS_THREADS", v),
+        None => std::env::remove_var("PALLAS_THREADS"),
+    }
+
+    let (_, d0) = digests[0];
+    for &(threads, d) in &digests[1..] {
+        assert_eq!(d, d0, "fig9 digest diverged at {threads} threads");
+    }
+}

@@ -1,0 +1,87 @@
+//! Thread-invariance of the per-day `generate_history` fan-out: the
+//! full log corpus (every field of every entry, bit patterns included)
+//! must be identical for `PALLAS_THREADS` ∈ {1, 2, 8}.  Kept as the
+//! single test in this binary because it mutates the process-global
+//! `PALLAS_THREADS`.
+
+use twophase::logs::generator::{generate_history, GeneratorConfig};
+use twophase::logs::schema::LogEntry;
+use twophase::sim::profile::NetProfile;
+
+/// FNV-1a over the exact bit patterns of a log corpus.
+fn digest(entries: &[LogEntry]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    mix(&(entries.len() as u64).to_le_bytes());
+    for e in entries {
+        mix(&e.timestamp_s.to_bits().to_le_bytes());
+        mix(e.network.as_bytes());
+        mix(&e.rtt_s.to_bits().to_le_bytes());
+        mix(&e.bandwidth_mbps.to_bits().to_le_bytes());
+        mix(&e.avg_file_mb.to_bits().to_le_bytes());
+        mix(&e.n_files.to_le_bytes());
+        mix(&e.params.cc.to_le_bytes());
+        mix(&e.params.p.to_le_bytes());
+        mix(&e.params.pp.to_le_bytes());
+        mix(&e.throughput_mbps.to_bits().to_le_bytes());
+        mix(&e.true_load.to_bits().to_le_bytes());
+    }
+    h
+}
+
+#[test]
+fn history_digest_is_thread_invariant() {
+    let orig = std::env::var("PALLAS_THREADS").ok();
+    // seeds × profiles × horizons, fractional horizon included so the
+    // truncated-last-day path is covered too
+    let cases: Vec<(NetProfile, GeneratorConfig)> = [11u64, 42, 0xB16_DA7A]
+        .iter()
+        .flat_map(|&seed| {
+            [NetProfile::xsede(), NetProfile::didclab()]
+                .into_iter()
+                .flat_map(move |p| {
+                    [2.0f64, 2.5].into_iter().map(move |days| {
+                        (
+                            p.clone(),
+                            GeneratorConfig {
+                                days,
+                                transfers_per_hour: 8.0,
+                                seed,
+                            },
+                        )
+                    })
+                })
+        })
+        .collect();
+
+    let mut digests: Vec<(&str, Vec<u64>)> = Vec::new();
+    for threads in ["1", "2", "8"] {
+        std::env::set_var("PALLAS_THREADS", threads);
+        let ds: Vec<u64> = cases
+            .iter()
+            .map(|(p, cfg)| {
+                let entries = generate_history(p, cfg);
+                assert!(!entries.is_empty());
+                digest(&entries)
+            })
+            .collect();
+        digests.push((threads, ds));
+    }
+    match orig {
+        Some(v) => std::env::set_var("PALLAS_THREADS", v),
+        None => std::env::remove_var("PALLAS_THREADS"),
+    }
+
+    let (_, d0) = digests[0].clone();
+    for (threads, ds) in &digests[1..] {
+        assert_eq!(
+            *ds, d0,
+            "generate_history digest diverged at {threads} threads"
+        );
+    }
+}

@@ -166,6 +166,49 @@ fn prop_log_entries_roundtrip_json() {
 }
 
 #[test]
+fn prop_rng_fork_is_deterministic_distinct_and_order_free() {
+    use twophase::util::rng::Rng;
+    run("rng fork seeding rule", 100, |g| {
+        let seed = g.rng().next_u64();
+        let n = g.usize_in(2..=16);
+
+        // deterministic: the same (seed, idx) always yields the same
+        // stream — a fork is a pure function, independent of any
+        // generator state
+        for idx in 0..n as u64 {
+            let mut a = Rng::fork(seed, idx);
+            let mut b = Rng::fork(seed, idx);
+            for _ in 0..8 {
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
+        }
+
+        // pairwise distinct: different indices open different streams
+        let firsts: Vec<u64> = (0..n as u64)
+            .map(|idx| Rng::fork(seed, idx).next_u64())
+            .collect();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_ne!(
+                    firsts[i], firsts[j],
+                    "fork({seed:#x}, {i}) collides with fork({seed:#x}, {j})"
+                );
+            }
+        }
+
+        // fork-order independent: forking in reverse (as a racing pool
+        // worker might) changes nothing
+        let reversed: Vec<u64> = (0..n as u64)
+            .rev()
+            .map(|idx| Rng::fork(seed, idx).next_u64())
+            .collect();
+        for (i, &v) in reversed.iter().rev().enumerate() {
+            assert_eq!(firsts[i], v, "fork order leaked into stream {i}");
+        }
+    });
+}
+
+#[test]
 fn prop_param_change_penalty_nonnegative_and_zero_on_identity() {
     run("penalty sanity", 100, |g| {
         let p = NetProfile::xsede();

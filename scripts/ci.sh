@@ -29,6 +29,26 @@ if command -v python3 >/dev/null 2>&1; then
     echo "BENCH_parallel.json parses"
 fi
 
+# experiment fan-out determinism: the digest-equality prop binaries
+# prove fig9 and generate_history bit-identical for 1/2/8 threads
+PALLAS_THREADS=2 cargo test -q --test prop_fig9_parallel --test prop_history_parallel
+
+# fig9 bench smoke: emits BENCH_fig9.json; the tracer's exported
+# par.fanout_calls/units must match the bench's direct counter snapshot
+TWOPHASE_DAYS=2 PALLAS_THREADS=2 cargo bench --bench exp_fig9_multiuser
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'EOF'
+import json
+b = json.load(open('BENCH_fig9.json'))
+assert b['digest_match'] is True, 'serial/parallel fig9 digests diverged'
+f = b['fanout']
+assert f['calls'] == f['calls_direct'] > 0, f
+assert f['units'] == f['units_direct'] > 0, f
+print('BENCH_fig9.json parses; fan-out counters agree '
+      f"({int(f['calls'])} calls / {int(f['units'])} units)")
+EOF
+fi
+
 # trace smoke: a tiny traced transfer must emit JSONL whose every line
 # parses and whose schema (field names per record kind) matches the
 # checked-in golden; `trace-schema --golden` exits nonzero on drift
